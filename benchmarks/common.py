@@ -1,0 +1,45 @@
+"""Shared benchmark utilities: timing, LRD method variants, tiny trainers."""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import freezing
+from repro.core.decompose import Decomposer, apply_lrd
+from repro.core.policy import (NO_LRD, RESNET_DEFAULT, DecompositionPolicy,
+                               Rule)
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-clock seconds per call (jit'd fn, blocked)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+# Paper method ladder (Tables 1/3/4): Org -> LRD -> RankOpt -> Freeze -> Combined
+def method_policies(base: DecompositionPolicy, alpha: float = 2.0):
+    lrd = base.with_alpha(alpha).with_quantize(False).with_min_dim(32)
+    ropt = base.with_alpha(alpha).with_quantize(True).with_min_dim(32)
+    return {
+        "org": (None, -1),
+        "lrd": (lrd, -1),
+        "rankopt": (ropt, -1),
+        "freeze": (lrd, 0),  # phase 0 static freeze
+        "combined": (ropt, 0),
+    }
+
+
+def csv_row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,72 @@
+"""LM train/decode throughput on smoke configs: the paper's method ladder
+applied to transformer-family models (its 'future work' — transformers —
+is our assigned zoo)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.configs import get_smoke_config
+from repro.configs.base import (DistConfig, LRDConfig, OptimConfig, RunConfig,
+                                ShapeConfig)
+from repro.launch import steps
+from repro.launch.mesh import make_host_mesh
+from repro.optim import init_optimizer
+
+ARCHS = ("smollm-360m", "olmoe-1b-7b", "xlstm-350m")
+METHODS = {
+    "org": dict(enabled=False),
+    "lrd": dict(enabled=True, rank_quantize=False),
+    "combined": dict(enabled=True, rank_quantize=False, freeze_mode="sequential"),
+}
+
+
+def run(seq=64, batch=4, iters=3):
+    rows = []
+    mesh = make_host_mesh(1, 1)
+    for arch in ARCHS:
+        base_fps = None
+        for method, lrd_kw in METHODS.items():
+            cfg = get_smoke_config(arch)
+            run_cfg = RunConfig(
+                model=cfg, shape=ShapeConfig("b", seq, batch, "train"),
+                lrd=LRDConfig(min_dim=16, **lrd_kw),
+                dist=DistConfig(fsdp=False, remat="none"),
+                optim=OptimConfig(name="sgdm", lr=1e-3, warmup_steps=0,
+                                  total_steps=100))
+            params, _ = steps.init_params(run_cfg, jax.random.PRNGKey(0))
+            state = steps.TrainState(params, init_optimizer(run_cfg.optim, params))
+            phase = 0 if lrd_kw.get("freeze_mode") else -1
+            fn = jax.jit(functools.partial(steps.build_train_step(run_cfg, mesh),
+                                           phase=phase))
+            key = jax.random.PRNGKey(1)
+            batch_d = {"tokens": jax.random.randint(key, (batch, seq), 0, cfg.vocab_size),
+                       "labels": jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)}
+            if cfg.family == "encdec":
+                batch_d["frames"] = jnp.zeros((batch, cfg.encoder_frames, cfg.d_model),
+                                              cfg.cdtype)
+            t = time_fn(lambda: fn(state, batch_d), iters=iters)
+            fps = batch * seq / t
+            if base_fps is None:
+                base_fps = fps
+            rows.append({"arch": arch, "method": method, "tok_per_s": fps,
+                         "delta_pct": 100 * (fps / base_fps - 1)})
+    return rows
+
+
+def main(**kw):
+    rows = run(**kw)
+    print("# LM train throughput: arch/method, tokens_per_s, delta%")
+    for r in rows:
+        print(f"{r['arch']}/{r['method']},{r['tok_per_s']:.0f},"
+              f"{r['delta_pct']:+.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Benchmark harness — one function per paper table/figure + kernel + LM
+throughput.  Prints ``name,us_per_call,derived`` CSV lines (plus per-table
+sections).  ``--full`` also runs ResNet-101/152 (slow on CPU).
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def _section(title):
+    print(f"\n==== {title} " + "=" * max(0, 60 - len(title)))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="also run ResNet-101/152 ladders (slow on CPU)")
+    args, _ = ap.parse_known_args()
+
+    failures = []
+
+    def guard(title, fn):
+        _section(title)
+        t0 = time.perf_counter()
+        try:
+            fn()
+        except Exception:  # keep the harness going; report at the end
+            traceback.print_exc()
+            failures.append(title)
+        print(f"[{title}: {time.perf_counter() - t0:.1f}s]")
+
+    from benchmarks import (fig2_rank_sweep, fig3_freezing_convergence,
+                            kernel_microbench, lm_throughput,
+                            table1_resnet_throughput,
+                            table2_decomposition_time, table3_accuracy,
+                            table4_vit)
+
+    guard("Table 1: ResNet-50 throughput ladder",
+          lambda: table1_resnet_throughput.main("resnet50"))
+    if args.full:
+        guard("Table 1: ResNet-101",
+              lambda: table1_resnet_throughput.main("resnet101", iters=2))
+        guard("Table 1: ResNet-152",
+              lambda: table1_resnet_throughput.main("resnet152", iters=2))
+    guard("Table 2: decomposition time",
+          lambda: table2_decomposition_time.main(
+              variants=("resnet50", "resnet101", "resnet152") if args.full
+              else ("resnet50",)))
+    guard("Table 3: accuracy ladder (synthetic proxy)", table3_accuracy.main)
+    guard("Table 4: ViT ladder", table4_vit.main)
+    guard("Fig 2: rank sweep (cliff curve)", fig2_rank_sweep.main)
+    guard("Fig 3: sequential vs regular freezing",
+          fig3_freezing_convergence.main)
+    guard("Kernel microbench (fused low-rank matmul)", kernel_microbench.main)
+    guard("LM train/decode throughput (smoke archs)", lm_throughput.main)
+
+    _section("summary")
+    if failures:
+        print(f"FAILED sections: {failures}")
+        sys.exit(1)
+    print("all benchmark sections completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Paper Table 1: train/inference throughput of ResNet before/after LRD with
+the proposed acceleration methods (Org / LRD / RankOpt / Freeze / Combined).
+
+CPU analogue of the paper's V100 runs: same models, same method ladder, fps
+measured as images/sec on small inputs.  The paper's *claims* under test:
+  (1) vanilla LRD gives only a small speedup;
+  (2) rank optimization enlarges it (train AND inference);
+  (3) freezing accelerates train only (inference == LRD);
+  (4) combined is the fastest training config.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import method_policies, time_fn
+from repro.core import freezing
+from repro.core.decompose import Decomposer, apply_lrd
+from repro.core.policy import NO_LRD, RESNET_DEFAULT
+from repro.models import resnet as resnet_mod
+
+
+def _train_step(params, x, y, variant, phase):
+    def loss_fn(p):
+        if phase >= 0:
+            p = freezing.apply_freeze(p, freezing.freeze_mask(p, phase))
+        logits = resnet_mod.resnet_apply(p, x, variant)
+        onehot = jax.nn.one_hot(y, logits.shape[-1])
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new = jax.tree_util.tree_map(lambda p, g: p - 1e-3 * g, params, grads)
+    return new, loss
+
+
+def run(variant: str = "resnet50", batch: int = 4, img: int = 32,
+        iters: int = 3, alpha: float = 2.0):
+    key = jax.random.PRNGKey(0)
+    dec = Decomposer(NO_LRD, dtype=jnp.float32)
+    dense_params = resnet_mod.resnet_init(key, variant, 10, dec)
+    x = jax.random.normal(key, (batch, img, img, 3))
+    y = jax.random.randint(key, (batch,), 0, 10)
+
+    rows = []
+    base = {}
+    for method, (policy, phase) in method_policies(RESNET_DEFAULT, alpha).items():
+        params = dense_params if policy is None else apply_lrd(dense_params, policy)[0]
+        tr = jax.jit(functools.partial(_train_step, variant=variant, phase=phase))
+        inf = jax.jit(functools.partial(resnet_mod.resnet_apply, variant=variant))
+        t_train = time_fn(lambda: tr(params, x, y), iters=iters)
+        t_inf = time_fn(lambda: inf(params, x), iters=iters)
+        fps_t, fps_i = batch / t_train, batch / t_inf
+        if method == "org":
+            base = {"t": fps_t, "i": fps_i}
+        rows.append({
+            "method": method,
+            "train_fps": fps_t,
+            "train_delta_pct": 100 * (fps_t / base["t"] - 1),
+            "infer_fps": fps_i,
+            "infer_delta_pct": 100 * (fps_i / base["i"] - 1),
+        })
+    return rows
+
+
+def main(variant="resnet50", **kw):
+    rows = run(variant, **kw)
+    print(f"# Table 1 ({variant}):  method, train_fps, dTrain%, infer_fps, dInfer%")
+    for r in rows:
+        print(f"{variant}/{r['method']},{r['train_fps']:.1f},"
+              f"{r['train_delta_pct']:+.1f}%,{r['infer_fps']:.1f},"
+              f"{r['infer_delta_pct']:+.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

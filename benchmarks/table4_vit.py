@@ -1,0 +1,84 @@
+"""Paper Table 4: ViT throughput + accuracy across the method ladder.
+The paper decomposes the two FC layers in each feed-forward block (SVD);
+we do exactly that via the wi/down policy rules."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import method_policies, time_fn
+from repro.core import freezing
+from repro.core.decompose import Decomposer, apply_lrd
+from repro.core.policy import DecompositionPolicy, NO_LRD, Rule
+from repro.data import SyntheticClassification
+from repro.models import vit as vit_mod
+
+# the paper's ViT policy: FFN FC layers + patch-embedding FC only
+VIT_POLICY = DecompositionPolicy(
+    name="vit-ffn",
+    rules=(
+        Rule(r"(norm|bias|pos_emb|cls|head)", "none"),
+        Rule(r"(wi|down|patch_embed)", "svd", min_dim=32),
+        Rule(r".*", "none"),
+    ),
+)
+
+
+def _train_step(params, x, y, phase, *, heads, patch):
+    def loss_fn(p):
+        if phase >= 0:
+            p = freezing.apply_freeze(p, freezing.freeze_mask(p, phase))
+        logits = vit_mod.vit_apply(p, x, heads=heads, patch=patch)
+        onehot = jax.nn.one_hot(y, logits.shape[-1])
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    return jax.tree_util.tree_map(lambda p, g: p - 3e-3 * g, params, grads), loss
+
+
+def run(batch=8, img=64, patch=16, d=192, heads=3, d_ff=768, layers=6,
+        iters=3, train_steps=15):
+    key = jax.random.PRNGKey(0)
+    dec = Decomposer(NO_LRD, dtype=jnp.float32)
+    dense = vit_mod.vit_init(key, dec, num_layers=layers, d=d, heads=heads,
+                             d_ff=d_ff, patch=patch, img=img)
+    rows = []
+    base_fps = None
+    for method, (policy, phase) in method_policies(VIT_POLICY).items():
+        params = dense if policy is None else apply_lrd(dense, policy)[0]
+        step = jax.jit(functools.partial(_train_step, phase=phase, heads=heads,
+                                         patch=patch))
+        ds = SyntheticClassification(img=img, batch=batch)
+        x, y = ds.next_batch()
+        xj, yj = jnp.asarray(x), jnp.asarray(y)
+        t = time_fn(lambda: step(params, xj, yj), iters=iters)
+        fps = batch / t
+        if base_fps is None:
+            base_fps = fps
+        # short fine-tune for the accuracy column
+        p = params
+        for _ in range(train_steps):
+            xb, yb = ds.next_batch()
+            p, loss = step(p, jnp.asarray(xb), jnp.asarray(yb))
+        xe, ye = ds.eval_batch(128)
+        pred = vit_mod.vit_apply(p, jnp.asarray(xe), heads=heads, patch=patch)
+        acc = float(jnp.mean(jnp.argmax(pred, -1) == jnp.asarray(ye)))
+        rows.append({"method": method, "train_fps": fps,
+                     "delta_pct": 100 * (fps / base_fps - 1), "accuracy": acc})
+    return rows
+
+
+def main(**kw):
+    rows = run(**kw)
+    print("# Table 4 (ViT): method, train_fps, delta%, accuracy")
+    for r in rows:
+        print(f"vit/{r['method']},{r['train_fps']:.1f},{r['delta_pct']:+.1f}%,"
+              f"{r['accuracy']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

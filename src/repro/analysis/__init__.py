@@ -1,0 +1,2 @@
+from repro.analysis.hlo import HloCost, analyze_hlo  # noqa: F401
+from repro.analysis.roofline import TPU_V5E_SPECS, roofline_terms  # noqa: F401

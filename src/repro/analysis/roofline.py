@@ -1,0 +1,82 @@
+"""Roofline terms for TPU v5e from dry-run artifacts (DESIGN.md §6).
+
+    compute_s    = FLOPs_per_chip / 197e12       (bf16 MXU peak)
+    memory_s     = bytes_per_chip / 819e9        (HBM bandwidth)
+    collective_s = coll_bytes_per_chip / 50e9    (ICI, conservative 1 link)
+
+All inputs are PER-DEVICE (the parsed HLO module is the per-device program).
+``model_flops`` is the analytic useful compute 6*N*D (dense) or 6*N_active*D
+(MoE) per device per step; its ratio against HLO FLOPs exposes remat /
+masked-attention / capacity-padding waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.analysis.hlo import HloCost
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpecs:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12  # bf16
+    hbm_bw: float = 819e9  # B/s
+    ici_bw: float = 50e9  # B/s per link (conservative single-link)
+    hbm_bytes: float = 16 * 2 ** 30
+
+
+TPU_V5E_SPECS = ChipSpecs()
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float
+    collective_breakdown: Dict[str, float]
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Perfect-overlap step-time lower bound = max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful compute / ideal step time — the score: 1.0 means the chip
+        spends every cycle on model FLOPs at MXU peak."""
+        ideal = self.model_flops / TPU_V5E_SPECS.peak_flops
+        return ideal / self.step_s if self.step_s > 0 else 0.0
+
+
+def model_flops_per_device(num_params_active: float, tokens_global: int,
+                           devices: int, *, kind: str = "train") -> float:
+    """6*N*D for train (fwd 2ND + bwd 4ND), 2*N*D for inference."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * num_params_active * tokens_global / devices
+
+
+def roofline_terms(cost: HloCost, *, model_flops: float,
+                   specs: ChipSpecs = TPU_V5E_SPECS) -> Roofline:
+    compute_s = cost.flops / specs.peak_flops
+    memory_s = cost.bytes / specs.hbm_bw
+    collective_s = cost.total_collective_bytes / specs.ici_bw
+    return Roofline(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        model_flops=model_flops,
+        hlo_flops=cost.flops,
+        useful_ratio=(model_flops / cost.flops) if cost.flops else 0.0,
+        collective_breakdown=dict(cost.collective_bytes),
+    )

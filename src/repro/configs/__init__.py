@@ -1,0 +1,11 @@
+"""Architecture registry: ``get_config(arch)`` / ``get_smoke_config(arch)``.
+
+Full configs match the assignment table exactly; smoke configs are reduced
+same-family models for CPU tests.  ``input_specs`` builds ShapeDtypeStruct
+stand-ins for the dry-run (no allocation).
+"""
+
+from repro.configs.archs import (ARCHS, get_config, get_smoke_config,  # noqa: F401
+                                 shape_cells, skip_reason)
+from repro.configs.base import (SHAPES, DistConfig, LRDConfig, ModelConfig,  # noqa: F401
+                                OptimConfig, RunConfig, ShapeConfig)

@@ -1,0 +1,3 @@
+"""--arch config module (assignment table entry; see archs.py)."""
+
+from repro.configs.archs import LLAMA_32_VISION_90B as CONFIG  # noqa: F401

@@ -1,0 +1,3 @@
+"""--arch config module (assignment table entry; see archs.py)."""
+
+from repro.configs.archs import OLMOE_1B_7B as CONFIG  # noqa: F401

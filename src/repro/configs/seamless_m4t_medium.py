@@ -1,0 +1,3 @@
+"""--arch config module (assignment table entry; see archs.py)."""
+
+from repro.configs.archs import SEAMLESS_M4T_MEDIUM as CONFIG  # noqa: F401

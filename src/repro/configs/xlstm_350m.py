@@ -1,0 +1,3 @@
+"""--arch config module (assignment table entry; see archs.py)."""
+
+from repro.configs.archs import XLSTM_350M as CONFIG  # noqa: F401

@@ -1,0 +1,3 @@
+"""--arch config module (assignment table entry; see archs.py)."""
+
+from repro.configs.archs import ZAMBA2_1_2B as CONFIG  # noqa: F401

@@ -1,0 +1,318 @@
+"""Applying LRD to models: plans, init-time factorized layouts, and
+materialization from pretrained dense weights.
+
+Two entry points, one source of truth (:class:`RankResolver`):
+
+* **Init-time** (dry-run / training-from-scratch): model ``init`` functions
+  call :meth:`Decomposer.linear` / :meth:`Decomposer.conv` which create either
+  a dense ``{"kernel"}`` or factorized ``{"u","v"}`` / ``{"first","core",
+  "last"}`` param group according to the policy, and record the decision in
+  the plan.  No SVD runs — ranks come from Eqs. 5/6 + Algorithm 1 (analytic).
+
+* **Materialize** (paper-faithful path, used by benchmarks/tests):
+  :func:`apply_lrd` walks a *pretrained dense* param tree, factorizes every
+  matching ``kernel`` leaf with real SVD/Tucker, and returns the rewritten
+  tree + plan.  This is the one-shot "decompose then fine-tune" flow of the
+  paper's experiments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rank_opt, svd, tucker
+from repro.core.policy import DecompositionPolicy, Rule
+
+__all__ = ["LayerPlan", "DecompositionPlan", "RankResolver", "Decomposer", "apply_lrd"]
+
+
+@dataclasses.dataclass
+class LayerPlan:
+    path: str
+    method: str  # "svd" | "tucker"
+    shape: Tuple[int, ...]  # original kernel shape (without stack dim)
+    rank: int  # r (SVD) or r1 (Tucker)
+    rank2: int = 0  # r2 (Tucker only)
+    eq5_rank: int = 0  # pre-optimization Eq.-5 rank, for reporting
+    use_decomposed: bool = True  # Algorithm-1 guard outcome
+
+    def params_saved(self) -> int:
+        if self.method == "svd":
+            c, s = self.shape[-2], self.shape[-1]
+            return c * s - self.rank * (c + s)
+        c, s, k, _ = self.shape
+        return c * s * k * k - (c * self.rank + self.rank * self.rank2 * k * k + self.rank2 * s)
+
+
+@dataclasses.dataclass
+class DecompositionPlan:
+    layers: Dict[str, LayerPlan] = dataclasses.field(default_factory=dict)
+    policy_name: str = ""
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {p: dataclasses.asdict(lp) for p, lp in self.layers.items()}, indent=1
+        )
+
+    def summary(self) -> str:
+        n = len(self.layers)
+        saved = sum(lp.params_saved() for lp in self.layers.values() if lp.use_decomposed)
+        kept = sum(1 for lp in self.layers.values() if not lp.use_decomposed)
+        return f"plan[{self.policy_name}]: {n} layers, {kept} kept dense, {saved/1e6:.1f}M params saved"
+
+
+class RankResolver:
+    """Caches Algorithm-1 decisions per (shape, rule) — one sweep per distinct
+    layer geometry, which is also how Table 2's decomposition-time overhead is
+    kept 'in the order of minutes'."""
+
+    def __init__(self, backend: str = "analytic-tpu", probe_tokens: int = 4096,
+                 hw: rank_opt.HardwareModel = rank_opt.TPU_V5E):
+        self.backend = backend
+        self.probe_tokens = probe_tokens
+        self.hw = hw
+        self._cache: Dict[Tuple, rank_opt.RankDecision] = {}
+
+    def svd_rank(self, c: int, s: int, rule: Rule) -> rank_opt.RankDecision:
+        key = ("svd", c, s, rule.alpha, rule.rank_quantize)
+        if key not in self._cache:
+            if rule.rank_quantize:
+                # sweep stride >1 only shortens Table-2 overhead; cliffs are
+                # every hw.mxu_tile so stride must stay below one tile.
+                stride = max(1, min(self.hw.mxu_tile // 4, 32))
+                dec = rank_opt.optimize_rank(
+                    c, s, alpha=rule.alpha, m=self.probe_tokens,
+                    backend=self.backend, hw=self.hw, stride=stride,
+                )
+            else:
+                r = svd.svd_rank_for_compression(c, s, rule.alpha)
+                t_orig = rank_opt.analytic_layer_time(self.probe_tokens, c, s, None, hw=self.hw)
+                t_dec = rank_opt.analytic_layer_time(self.probe_tokens, c, s, r, hw=self.hw)
+                dec = rank_opt.RankDecision(
+                    rank=r, use_decomposed=True, original_time=t_orig, decomposed_time=t_dec
+                )
+            self._cache[key] = dataclasses.replace(
+                dec, rank=max(1, min(dec.rank, svd.max_rank(c, s)))
+            )
+        return self._cache[key]
+
+    def tucker_ranks(self, c: int, s: int, k: int, rule: Rule) -> rank_opt.RankDecision:
+        key = ("tucker", c, s, k, rule.alpha, rule.rank_quantize)
+        if key not in self._cache:
+            if rule.rank_quantize:
+                dec = rank_opt.optimize_rank_tucker(
+                    c, s, k, alpha=rule.alpha, m=self.probe_tokens, hw=self.hw,
+                    stride=max(1, min(self.hw.mxu_tile // 4, 32)),
+                )
+            else:
+                r1, _ = tucker.tucker_rank_for_compression(c, s, k, rule.alpha)
+                dec = rank_opt.RankDecision(
+                    rank=r1, use_decomposed=True, original_time=1.0, decomposed_time=0.5
+                )
+            self._cache[key] = dec
+        return self._cache[key]
+
+
+class Decomposer:
+    """Init-time LRD: hands factorized param layouts to model ``init`` fns."""
+
+    def __init__(
+        self,
+        policy: Optional[DecompositionPolicy],
+        *,
+        resolver: Optional[RankResolver] = None,
+        dtype=jnp.bfloat16,
+    ):
+        self.policy = policy
+        self.resolver = resolver or RankResolver()
+        self.dtype = dtype
+        self.plan = DecompositionPlan(policy_name=policy.name if policy else "none")
+
+    # -- param factories ----------------------------------------------------
+
+    def linear(self, key, path: str, c: int, s: int, *, bias: bool = False,
+               dtype=None, stack: Tuple[int, ...] = ()) -> Dict[str, Any]:
+        """Dense or SVD-factorized linear params for ``y = x @ W``.
+
+        ``stack`` prepends scan-over-layers dims to every leaf.
+        """
+        dtype = dtype or self.dtype
+        rule = self.policy.match(path) if self.policy else None
+        if rule is not None and min(c, s) < rule.min_dim:
+            rule = None
+        out: Dict[str, Any] = {}
+        if rule is None or rule.method != "svd":
+            out["kernel"] = _init_dense(key, stack + (c, s), dtype)
+        else:
+            dec = self.resolver.svd_rank(c, s, rule)
+            eq5 = svd.svd_rank_for_compression(c, s, rule.alpha)
+            self.plan.layers[path] = LayerPlan(
+                path=path, method="svd", shape=(c, s), rank=dec.rank,
+                eq5_rank=eq5, use_decomposed=dec.use_decomposed,
+            )
+            if not dec.use_decomposed:  # Algorithm-1 guard: keep original layer
+                out["kernel"] = _init_dense(key, stack + (c, s), dtype)
+            else:
+                ku, kv = jax.random.split(key)
+                r = dec.rank
+                # He-style fan-in init split across the two factors so the
+                # composed map has the same variance as a dense init.
+                out["u"] = _init_dense(ku, stack + (c, r), dtype)
+                out["v"] = _init_dense(kv, stack + (r, s), dtype)
+        if bias:
+            out["bias"] = jnp.zeros(stack + (s,), dtype)
+        return out
+
+    def conv(self, key, path: str, c: int, s: int, k: int, *, dtype=None,
+             stack: Tuple[int, ...] = ()) -> Dict[str, Any]:
+        """Dense or Tucker-factorized kxk conv params (HWIO kernels)."""
+        dtype = dtype or self.dtype
+        rule = self.policy.match(path) if self.policy else None
+        if rule is not None and min(c, s) < rule.min_dim:
+            rule = None
+        if k == 1 and rule is not None and rule.method == "tucker":
+            # 1x1 convs are matrices — paper treats them as FC (SVD).
+            rule = dataclasses.replace(rule, method="svd")
+        out: Dict[str, Any] = {}
+        if rule is None or rule.method == "none":
+            out["kernel"] = _init_dense(key, stack + (k, k, c, s), dtype)
+        elif rule.method == "svd":
+            dec = self.resolver.svd_rank(c, s, rule)
+            self.plan.layers[path] = LayerPlan(
+                path=path, method="svd", shape=(c, s), rank=dec.rank,
+                eq5_rank=svd.svd_rank_for_compression(c, s, rule.alpha),
+                use_decomposed=dec.use_decomposed,
+            )
+            if not dec.use_decomposed:
+                out["kernel"] = _init_dense(key, stack + (k, k, c, s), dtype)
+            else:
+                ku, kv = jax.random.split(key)
+                out["u"] = _init_dense(ku, stack + (c, dec.rank), dtype)
+                out["v"] = _init_dense(kv, stack + (dec.rank, s), dtype)
+        else:  # tucker
+            dec = self.resolver.tucker_ranks(c, s, k, rule)
+            r1 = dec.rank
+            r2 = max(1, min(int(r1), s))
+            self.plan.layers[path] = LayerPlan(
+                path=path, method="tucker", shape=(c, s, k, k), rank=r1, rank2=r2,
+                eq5_rank=tucker.tucker_rank_for_compression(c, s, k, rule.alpha)[0],
+                use_decomposed=dec.use_decomposed,
+            )
+            if not dec.use_decomposed:
+                out["kernel"] = _init_dense(key, stack + (k, k, c, s), dtype)
+            else:
+                k1, k2, k3 = jax.random.split(key, 3)
+                out["first"] = _init_dense(k1, stack + (c, r1), dtype)
+                out["core"] = _init_dense(k2, stack + (k, k, r1, r2), dtype)
+                out["last"] = _init_dense(k3, stack + (r2, s), dtype)
+        return out
+
+
+def _init_dense(key, shape, dtype):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    if len(shape) >= 4:  # conv HWIO: fan_in = kh*kw*C
+        fan_in = shape[-4] * shape[-3] * shape[-2] if len(shape) == 4 else np.prod(shape[-4:-1])
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Materialization from pretrained dense weights (the paper's actual flow)
+# ---------------------------------------------------------------------------
+
+def apply_lrd(
+    params: Any,
+    policy: DecompositionPolicy,
+    *,
+    resolver: Optional[RankResolver] = None,
+    use_randomized_svd_above: int = 2048 * 2048,
+    balance: str = "balanced",
+) -> Tuple[Any, DecompositionPlan]:
+    """Factorize every policy-matched ``kernel`` leaf of a dense param tree.
+
+    2-D/3-D kernels -> SVD ``{"u","v"}``; 4-D/5-D HWIO conv kernels -> Tucker
+    ``{"first","core","last"}`` (1x1 convs -> SVD).  Leaves everything else
+    untouched.  Returns (new_params, plan).
+    """
+    resolver = resolver or RankResolver()
+    plan = DecompositionPlan(policy_name=policy.name)
+
+    def walk(tree, path):
+        if not isinstance(tree, dict):
+            return tree
+        if "kernel" in tree and not isinstance(tree["kernel"], dict):
+            w = tree["kernel"]
+            rewritten = _maybe_factorize(w, path, policy, resolver, plan,
+                                         use_randomized_svd_above, balance)
+            if rewritten is not None:
+                out = dict(tree)
+                del out["kernel"]
+                out.update(rewritten)
+                return out
+            return tree
+        return {k: walk(v, f"{path}/{k}" if path else k) for k, v in tree.items()}
+
+    return walk(params, ""), plan
+
+
+def _maybe_factorize(w, path, policy, resolver, plan, rsvd_threshold, balance):
+    rule = policy.match(path + "/kernel")
+    if rule is None:
+        return None
+    if w.ndim in (2, 3):
+        c, s = int(w.shape[-2]), int(w.shape[-1])
+        if min(c, s) < rule.min_dim:
+            return None
+        dec = resolver.svd_rank(c, s, rule)
+        plan.layers[path] = LayerPlan(
+            path=path, method="svd", shape=(c, s), rank=dec.rank,
+            eq5_rank=svd.svd_rank_for_compression(c, s, rule.alpha),
+            use_decomposed=dec.use_decomposed,
+        )
+        if not dec.use_decomposed:
+            return None
+        if w.ndim == 2 and c * s > rsvd_threshold:
+            u, v = svd.randomized_svd(w, dec.rank, balance=balance)
+        else:
+            u, v = svd.svd_decompose(w, dec.rank, balance=balance)
+        return {"u": u, "v": v}
+    if w.ndim == 4:  # HWIO conv kernel
+        kh, kw, c, s = (int(d) for d in w.shape)
+        if min(c, s) < rule.min_dim:
+            return None
+        if kh == 1 and kw == 1:  # 1x1 conv == FC (paper Fig. 1)
+            dec = resolver.svd_rank(c, s, rule)
+            plan.layers[path] = LayerPlan(
+                path=path, method="svd", shape=(c, s), rank=dec.rank,
+                eq5_rank=svd.svd_rank_for_compression(c, s, rule.alpha),
+                use_decomposed=dec.use_decomposed,
+            )
+            if not dec.use_decomposed:
+                return None
+            u, v = svd.svd_decompose(w[0, 0], dec.rank, balance=balance)
+            return {"u": u, "v": v}
+        if rule.method != "tucker":
+            return None
+        dec = resolver.tucker_ranks(c, s, kh, rule)
+        r1, r2 = dec.rank, max(1, int(dec.rank))
+        plan.layers[path] = LayerPlan(
+            path=path, method="tucker", shape=(c, s, kh, kw), rank=r1, rank2=r2,
+            eq5_rank=tucker.tucker_rank_for_compression(c, s, kh, rule.alpha)[0],
+            use_decomposed=dec.use_decomposed,
+        )
+        if not dec.use_decomposed:
+            return None
+        w_cskk = jnp.transpose(w, (2, 3, 0, 1))  # HWIO -> (C, S, kh, kw)
+        first, core, last = tucker.tucker2_decompose(w_cskk, r1, r2)
+        return {
+            "first": first,  # (C, r1)
+            "core": jnp.transpose(core, (2, 3, 0, 1)),  # HWIO (kh, kw, r1, r2)
+            "last": last,  # (r2, S)
+        }
+    return None

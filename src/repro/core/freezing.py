@@ -1,0 +1,102 @@
+"""Sequential freezing of decomposed layers — paper §2.2, Algorithm 2.
+
+Every decomposed layer contributes factor *groups*:
+
+    SVD:    group 0 = {u},        group 1 = {v}
+    Tucker: group 0 = {first, last},  group 1 = {core}
+
+Phase p (= epoch % 2) freezes group ``p`` and trains the complement —
+even epochs train group 1 (the SVD second factor / Tucker core, matching the
+paper's "freeze L(0) [and L(2)], unfreeze L(1)"), odd epochs swap.  Regular
+(non-sequential) freezing is phase 0 forever.
+
+JAX adaptation: PyTorch's ``requires_grad=False`` becomes
+``jax.lax.stop_gradient`` applied under a **static** phase.  The train loop
+compiles one step per phase (two cache entries); XLA dead-code-eliminates the
+frozen factors' whole backward + optimizer update, which is where the paper's
+training-time saving comes from.  Non-decomposed params are always trainable.
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["FreezeMode", "factor_group", "freeze_mask", "apply_freeze", "phase_for_epoch"]
+
+# Leaf names of decomposed factors -> group id (see module docstring).
+_SVD_GROUPS = {"u": 0, "v": 1}
+_TUCKER_GROUPS = {"first": 0, "last": 0, "core": 1}
+
+
+class FreezeMode(str, enum.Enum):
+    NONE = "none"  # all params trainable (vanilla LRD)
+    REGULAR = "regular"  # phase fixed to 0 for the whole run (paper §2.2 para 1)
+    SEQUENTIAL = "sequential"  # phase = epoch % 2 (Algorithm 2)
+
+
+def factor_group(leaf_name: str) -> int | None:
+    """Group id of a decomposed-factor leaf, or None for ordinary params."""
+    if leaf_name in _SVD_GROUPS:
+        return _SVD_GROUPS[leaf_name]
+    if leaf_name in _TUCKER_GROUPS:
+        return _TUCKER_GROUPS[leaf_name]
+    return None
+
+
+def phase_for_epoch(epoch: int, mode: FreezeMode | str) -> int:
+    mode = FreezeMode(mode)
+    if mode == FreezeMode.NONE:
+        return -1  # sentinel: no freezing
+    if mode == FreezeMode.REGULAR:
+        return 0
+    return int(epoch) % 2
+
+
+def freeze_mask(params: Any, phase: int) -> Any:
+    """Pytree of bools, True = trainable at this phase.
+
+    ``phase == -1`` (FreezeMode.NONE) marks everything trainable.  Matching is
+    by leaf *name* within the param dicts, so the mask composes with any model
+    that stores decomposed factors under the canonical names.
+    """
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            out = {}
+            for name, sub in tree.items():
+                if isinstance(sub, dict):
+                    out[name] = walk(sub)
+                else:
+                    g = factor_group(name)
+                    trainable = True if (phase < 0 or g is None) else (g != phase)
+                    out[name] = trainable
+            return out
+        return True
+
+    return walk(params)
+
+
+def apply_freeze(params: Any, mask: Any) -> Any:
+    """stop_gradient on frozen leaves; identity elsewhere.
+
+    Called inside the loss function so the *same* param tree is threaded
+    through the optimizer — frozen leaves simply receive zero gradient, and
+    with a static phase XLA removes their entire backward graph.
+    """
+    return jax.tree_util.tree_map(
+        lambda p, m: p if m else jax.lax.stop_gradient(p), params, mask
+    )
+
+
+def trainable_fraction(mask: Any, params: Any) -> float:
+    """Fraction of parameters trainable under ``mask`` (diagnostics/tests)."""
+    sizes = jax.tree_util.tree_map(lambda p: int(jnp.size(p)), params)
+    total = sum(jax.tree_util.tree_leaves(sizes))
+    live = sum(
+        s for s, m in zip(jax.tree_util.tree_leaves(sizes), jax.tree_util.tree_leaves(mask)) if m
+    )
+    return live / max(total, 1)

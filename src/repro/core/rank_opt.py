@@ -1,0 +1,290 @@
+"""Rank optimization — paper §2.1, Algorithm 1 ("rank quantization").
+
+Given the Eq.-5 rank ``R`` for the desired compression ratio ``alpha`` and the
+Eq.-6 lower bound ``R_min`` (rank at ratio ``alpha+1``), sweep ``t(r)`` for
+``r in [R_min, R]`` and pick the rank just below the largest step-time cliff:
+
+    R_opt = argmax_{r} [ t(r+1) - t(r) ]        (forward difference)
+
+then keep the decomposed layer only if ``t(R_opt) < T_original`` (per-layer
+fallback to the undecomposed layer, exactly as the paper's Algorithm 1).
+
+Two interchangeable ``t(r)`` backends:
+
+* ``measured``      — wall-clock timing of a jitted probe, the paper's own
+                      platform-agnostic method.  Used by the CPU benchmarks.
+* ``analytic-tpu``  — deterministic TPU v5e roofline model with MXU tile
+                      quantization: a matmul dimension d occupies
+                      ceil(d/128) * 128 MXU lanes, so t(r) is a staircase with
+                      cliffs exactly at multiples of 128.  This is the
+                      TPU-native re-derivation of the paper's empirical
+                      observation (its Fig. 2 cliffs at 256 on V100).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core import svd, tucker
+
+__all__ = [
+    "TPU_V5E",
+    "HardwareModel",
+    "RankDecision",
+    "analytic_layer_time",
+    "optimize_rank",
+    "quantize_rank",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """Roofline constants + tile quantization for the analytic backend."""
+
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12  # bf16 MXU peak, per chip
+    hbm_bw: float = 819e9  # bytes/s
+    mxu_tile: int = 128  # systolic array edge -> matmul dim granularity
+    bytes_per_elem: int = 2  # bf16
+
+    def matmul_time(self, m: int, k: int, n: int, *, fused_operands: int = 0) -> float:
+        """max(compute, memory) time of an (m,k)x(k,n) matmul.
+
+        ``fused_operands`` bytes already resident in VMEM (e.g. the rank-r
+        intermediate of the fused low-rank kernel) are excluded from HBM
+        traffic.
+        """
+        tile = self.mxu_tile
+        mq = -(-m // tile) * tile
+        kq = -(-k // tile) * tile
+        nq = -(-n // tile) * tile
+        compute = 2.0 * mq * kq * nq / self.peak_flops
+        traffic = (m * k + k * n + m * n - fused_operands) * self.bytes_per_elem
+        return max(compute, traffic / self.hbm_bw)
+
+
+TPU_V5E = HardwareModel()
+
+
+def quantize_rank(rank: int, *, tile: int = 128, mode: str = "floor") -> int:
+    """Snap a rank to the hardware tile (the 'rank quantization' of the title).
+
+    ``floor`` keeps compression >= requested; ``nearest`` minimizes the rank
+    perturbation.  Ranks below one tile are left unchanged (a 1-tile matmul is
+    already a single MXU pass; shrinking further saves nothing).
+    """
+    if rank <= tile:
+        return rank
+    if mode == "floor":
+        return (rank // tile) * tile
+    if mode == "nearest":
+        return max(tile, int(round(rank / tile)) * tile)
+    raise ValueError(f"unknown quantize mode {mode!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RankDecision:
+    """Outcome of Algorithm 1 for one layer."""
+
+    rank: int  # chosen rank (Eq.-5 rank if optimization rejected)
+    use_decomposed: bool  # False -> keep the original layer (Algorithm 1 guard)
+    original_time: float
+    decomposed_time: float
+    searched: Sequence[int] = ()
+    times: Sequence[float] = ()
+
+    @property
+    def speedup(self) -> float:
+        return self.original_time / max(self.decomposed_time, 1e-30)
+
+
+def analytic_layer_time(
+    m: int,
+    c: int,
+    s: int,
+    rank: Optional[int],
+    *,
+    hw: HardwareModel = TPU_V5E,
+    kernel_fused: bool = True,
+) -> float:
+    """Analytic time of a (decomposed) linear layer on ``hw``.
+
+    ``rank=None`` -> the original dense layer ``(m,c)x(c,s)``.
+    Otherwise two chained matmuls through the rank bottleneck; with
+    ``kernel_fused`` the (m, r) intermediate never round-trips HBM (our Pallas
+    kernel), which both removes traffic and sharpens the rank cliffs.
+    """
+    if rank is None:
+        return hw.matmul_time(m, c, s)
+    # Fused kernel: the (m, r) intermediate is neither written by the first
+    # matmul nor re-read by the second -> subtract it from both traffic terms.
+    inter = m * rank if kernel_fused else 0
+    return hw.matmul_time(m, c, rank, fused_operands=inter) + hw.matmul_time(
+        m, rank, s, fused_operands=inter
+    )
+
+
+def _measured_probe(time_fn: Callable[[Optional[int]], float]):
+    return time_fn
+
+
+def optimize_rank(
+    c: int,
+    s: int,
+    *,
+    alpha: float = 2.0,
+    m: int = 4096,
+    backend: str = "analytic-tpu",
+    hw: HardwareModel = TPU_V5E,
+    time_fn: Optional[Callable[[Optional[int]], float]] = None,
+    stride: int = 1,
+    kernel_fused: bool = True,
+) -> RankDecision:
+    """Algorithm 1 for an SVD-decomposable (C, S) linear layer.
+
+    Parameters
+    ----------
+    m         : probe batch (tokens) used to evaluate t(r).
+    backend   : "analytic-tpu" or "measured" (requires ``time_fn``).
+    time_fn   : measured backend only — maps rank (or None for the original
+                layer) to seconds.
+    stride    : sweep stride; 1 reproduces the paper exactly, larger strides
+                trade fidelity for sweep cost (Table 2 decomposition time).
+    """
+    r_hi = svd.svd_rank_for_compression(c, s, alpha)
+    r_lo = svd.svd_rank_for_compression(c, s, alpha + 1.0)
+    if backend == "analytic-tpu":
+        probe = lambda r: analytic_layer_time(m, c, s, r, hw=hw, kernel_fused=kernel_fused)
+    elif backend == "measured":
+        if time_fn is None:
+            raise ValueError("measured backend requires time_fn")
+        probe = time_fn
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    ranks = list(range(r_lo, r_hi + 1, stride))
+    if ranks[-1] != r_hi:
+        ranks.append(r_hi)
+    times = [probe(r) for r in ranks]
+    t_orig = probe(None)
+
+    if len(ranks) >= 2:
+        diffs = np.diff(times)  # diffs[i] = t(ranks[i+1]) - t(ranks[i])
+        # Rank just below the largest cliff; ties -> largest rank (accuracy).
+        best = int(np.flatnonzero(diffs == diffs.max())[-1])
+        r_opt = ranks[best]
+        t_opt = times[best]
+        if stride > 1 and best + 1 < len(ranks):
+            # Coarse sweep brackets the cliff inside (ranks[best],
+            # ranks[best+1]]; refine at stride 1 so we sit *directly* under
+            # it (e.g. exactly 256, not 245) — accuracy headroom is free.
+            for r in range(ranks[best] + 1, ranks[best + 1]):
+                t = probe(r)
+                if t <= t_opt * (1 + 1e-9):
+                    r_opt, t_opt = r, t
+    else:
+        r_opt, t_opt = ranks[0], times[0]
+
+    return RankDecision(
+        rank=r_opt,
+        use_decomposed=bool(t_opt < t_orig),
+        original_time=float(t_orig),
+        decomposed_time=float(t_opt),
+        searched=tuple(ranks),
+        times=tuple(float(t) for t in times),
+    )
+
+
+def optimize_rank_tucker(
+    c: int,
+    s: int,
+    k: int,
+    *,
+    alpha: float = 2.0,
+    beta: float = 1.0,
+    m: int = 4096,
+    hw: HardwareModel = TPU_V5E,
+    time_fn: Optional[Callable[[Optional[int]], float]] = None,
+    stride: int = 1,
+) -> RankDecision:
+    """Algorithm 1 for a Tucker-decomposable (C, S, k, k) conv layer.
+
+    The sweep variable is r1 (r2 = beta*r1, paper §2.1).  The analytic model
+    treats the kxk core conv as a matmul with contraction c*k*k (im2col view).
+    """
+    (r_hi, _) = tucker.tucker_rank_for_compression(c, s, k, alpha, beta=beta)
+    (r_lo, _) = tucker.tucker_min_rank(c, s, k, alpha, beta=beta)
+
+    def analytic(r: Optional[int]) -> float:
+        if r is None:
+            return hw.matmul_time(m, c * k * k, s)
+        r2 = max(1, int(beta * r))
+        return (
+            hw.matmul_time(m, c, r)
+            + hw.matmul_time(m, r * k * k, r2)
+            + hw.matmul_time(m, r2, s)
+        )
+
+    probe = time_fn if time_fn is not None else analytic
+    ranks = list(range(r_lo, r_hi + 1, stride))
+    if ranks[-1] != r_hi:
+        ranks.append(r_hi)
+    times = [probe(r) for r in ranks]
+    t_orig = probe(None)
+    if len(ranks) >= 2:
+        diffs = np.diff(times)
+        best = int(np.flatnonzero(diffs == diffs.max())[-1])
+        r_opt, t_opt = ranks[best], times[best]
+        if stride > 1 and best + 1 < len(ranks):
+            for r in range(ranks[best] + 1, ranks[best + 1]):  # stride-1 refine
+                t = probe(r)
+                if t <= t_opt * (1 + 1e-9):
+                    r_opt, t_opt = r, t
+    else:
+        r_opt, t_opt = ranks[0], times[0]
+    return RankDecision(
+        rank=r_opt,
+        use_decomposed=bool(t_opt < t_orig),
+        original_time=float(t_orig),
+        decomposed_time=float(t_opt),
+        searched=tuple(ranks),
+        times=tuple(float(t) for t in times),
+    )
+
+
+def measured_linear_time_fn(c: int, s: int, *, m: int = 1024, dtype=None, iters: int = 5):
+    """Build a ``time_fn`` that times a real (decomposed) linear layer.
+
+    This is the paper's own probe: jit, warm up, then median wall-clock.
+    Platform-agnostic — on CPU it exhibits its own (SIMD-width) staircase.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    dtype = dtype or jnp.float32
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (m, c), dtype)
+
+    def time_fn(rank: Optional[int]) -> float:
+        if rank is None:
+            w = jnp.zeros((c, s), dtype)
+            f = jax.jit(lambda x, w: x @ w)
+            args = (x, w)
+        else:
+            u = jnp.zeros((c, rank), dtype)
+            v = jnp.zeros((rank, s), dtype)
+            f = jax.jit(lambda x, u, v: (x @ u) @ v)
+            args = (x, u, v)
+        f(*args)[0].block_until_ready()  # compile + warm
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            f(*args).block_until_ready()
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    return time_fn

@@ -1,0 +1,2 @@
+from repro.data.synthetic import (LMBatchIterator, SyntheticClassification,  # noqa: F401
+                                  SyntheticLM)

@@ -1,0 +1,10 @@
+from repro.distributed.sharding import (  # noqa: F401
+    ACT_RULES,
+    ACT_RULES_SP,
+    PARAM_RULES,
+    PARAM_RULES_NO_FSDP,
+    axis_rules,
+    current_mesh,
+    param_specs,
+    shard,
+)

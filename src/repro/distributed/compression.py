@@ -1,0 +1,73 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+With a multi-pod mesh, data parallelism across pods makes the gradient
+all-reduce the dominant traffic on the slowest (inter-pod DCN) link.
+``value_and_grad_compressed`` computes the loss/grads under a
+*partial-manual* shard_map: the ``pod`` axis is manual (each pod computes
+grads on its own batch half), the intra-pod axes stay with the SPMD
+partitioner.  The pod-axis mean is then performed explicitly in **int8**
+(4x fewer bytes on the wire — visible in the dry-run HLO as an int8
+all-reduce), with per-tensor dynamic scales.
+
+Overflow-safe by construction: each pod quantizes to [-127//n_pods,
+127//n_pods], so the int8 ring-sum cannot wrap.  The residual quantization
+error can be fed back by the caller (error-feedback tree in the train loop).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _quantize_pmean_pod(g: jax.Array, n_pods: int) -> jax.Array:
+    if g.dtype == jnp.int32 or g.ndim == 0:
+        return jax.lax.pmean(g, "pod")
+    limit = max(127 // max(n_pods, 1), 1)
+    amax = jnp.max(jnp.abs(g)).astype(jnp.float32) + 1e-12
+    scale = amax / limit
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -limit, limit).astype(jnp.int8)
+    q_sum = jax.lax.psum(q, "pod")  # int8 on the wire
+    scale_mean = jax.lax.pmean(scale, "pod")  # scalar consensus scale
+    return q_sum.astype(jnp.float32) * scale_mean / n_pods
+
+
+def value_and_grad_compressed(
+    loss_fn: Callable, params: Any, batch: Any, mesh, mode: str,
+) -> Tuple[jax.Array, Any]:
+    """(loss, grads) with int8 pod-axis gradient sync.
+
+    Falls back to plain value_and_grad when compression is off or the mesh
+    has no pod axis (single-pod: nothing crosses DCN).
+    """
+    if mode == "none" or "pod" not in mesh.axis_names:
+        return jax.value_and_grad(loss_fn)(params, batch)
+    n_pods = dict(zip(mesh.axis_names, mesh.devices.shape))["pod"]
+
+    def local(p, b):
+        # inside the manual-pod region, sharding constraints must not
+        # reference the pod axis (Manual/Auto axes cannot mix in one spec):
+        # re-enter the rules context with batch -> data only.
+        from repro.distributed import sharding as shmod
+        act = dict(shmod._CTX.act_rules or shmod.ACT_RULES)
+        act["batch"] = ("data", None)
+        prm = shmod._CTX.param_rules or shmod.PARAM_RULES
+        with shmod.axis_rules(mesh, act=act, params=prm):
+            loss, g = jax.value_and_grad(loss_fn)(p, b)
+        g = jax.tree_util.tree_map(
+            functools.partial(_quantize_pmean_pod, n_pods=n_pods), g)
+        return jax.lax.pmean(loss, "pod"), g
+
+    batch_specs = jax.tree_util.tree_map(
+        lambda x: P(*(("pod",) + (None,) * (x.ndim - 1))), batch)
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), batch_specs),
+        out_specs=(P(), P()),
+        axis_names={"pod"},
+        check_vma=False,
+    )(params, batch)

@@ -1,0 +1,230 @@
+"""Logical-axis sharding rules with divisibility-aware fallbacks.
+
+MaxText-style: model code annotates tensors with *logical* axes
+(``shard(x, "batch", "seq", None)``); an active rule table maps each logical
+axis to mesh axes, skipping candidates whose mesh axes are missing, already
+used by an earlier dim, or do not divide the dimension.  This is what lets a
+single model definition run on (16,16), (2,16,16) and a 1-device CPU mesh —
+GQA with 8 KV heads on a 16-way model axis simply falls through to the next
+candidate instead of failing to partition (DESIGN.md §3).
+
+Two rule tables each for params and activations:
+
+* ``PARAM_RULES``           FSDP on: weights sharded over ("data", "model") —
+                            ZeRO-3; the scan body all-gathers one layer slice
+                            at a time (overlapped by XLA's async collectives).
+* ``PARAM_RULES_NO_FSDP``   TP only (weights replicated across data).
+* ``ACT_RULES``             standard: batch over (pod, data), heads/mlp/vocab
+                            over model, sequence replicated.
+* ``ACT_RULES_SP``          sequence-parallel decode: long KV caches / SSM
+                            state sharded over model (long_500k cells).
+
+The ``pod`` axis is deliberately absent from every param rule: parameters are
+never sharded across pods, so the only cross-pod (DCN) traffic is the
+gradient all-reduce (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisCandidate = Union[None, str, Tuple[str, ...]]
+RuleTable = Dict[str, Tuple[AxisCandidate, ...]]
+
+# --------------------------------------------------------------------------
+# Rule tables
+# --------------------------------------------------------------------------
+
+PARAM_RULES: RuleTable = {
+    "embed": (("data",), None),
+    "mlp": ("model", None),
+    "heads": ("model", None),
+    "kv_heads": ("model", None),
+    "vocab": ("model", None),
+    "expert": ("model", None),
+    # LRD factors have ONE ordinary dim each (u: embed x r, v: r x out), so
+    # the rank dim must take whichever mesh axis the sibling dim didn't —
+    # otherwise factors stay 16-way sharded and 72B-scale optimizer state
+    # blows past HBM.  This is *storage* sharding (ZeRO); the factor is
+    # all-gathered before use, so MXU rank alignment is unaffected.
+    "rank": (("data",), ("model",), None),
+    "conv": (None,),
+}
+
+PARAM_RULES_NO_FSDP: RuleTable = dict(PARAM_RULES, embed=(None,))
+
+ACT_RULES: RuleTable = {
+    "batch": (("pod", "data"), "data", None),
+    "seq": (None,),
+    "embed": (None,),
+    "heads": ("model", None),
+    "kv_heads": ("model", None),
+    "mlp": ("model", None),
+    "vocab": ("model", None),
+    "expert": ("model", None),
+    "kv_seq": (None,),
+    "frames": (None,),
+}
+
+# Sequence-parallel decode: the KV cache / attention keys shard over model.
+ACT_RULES_SP: RuleTable = dict(
+    ACT_RULES, kv_seq=("model", None), kv_heads=(None,), heads=("model", None)
+)
+
+# --------------------------------------------------------------------------
+# Context
+# --------------------------------------------------------------------------
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.act_rules: Optional[RuleTable] = None
+        self.param_rules: Optional[RuleTable] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, *, act: RuleTable = ACT_RULES, params: RuleTable = PARAM_RULES):
+    prev = (_CTX.mesh, _CTX.act_rules, _CTX.param_rules)
+    _CTX.mesh, _CTX.act_rules, _CTX.param_rules = mesh, act, params
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.act_rules, _CTX.param_rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+# --------------------------------------------------------------------------
+# Resolution
+# --------------------------------------------------------------------------
+
+def _resolve_spec(shape: Sequence[int], axes: Sequence[Optional[str]],
+                  rules: RuleTable, mesh: Mesh) -> P:
+    """Map logical axes -> PartitionSpec honoring divisibility + axis reuse."""
+    used: set = set()
+    parts = []
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, ax in zip(shape, axes):
+        chosen = None
+        for cand in rules.get(ax, (None,)) if ax else (None,):
+            if cand is None:
+                break
+            names = (cand,) if isinstance(cand, str) else tuple(cand)
+            if any(n not in sizes or n in used for n in names):
+                continue
+            total = 1
+            for n in names:
+                total *= sizes[n]
+            if dim % total == 0:
+                chosen = names
+                break
+        if chosen:
+            used.update(chosen)
+            parts.append(chosen[0] if len(chosen) == 1 else tuple(chosen))
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Annotate activation ``x`` with logical axes (no-op outside axis_rules)."""
+    if _CTX.mesh is None or _CTX.act_rules is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"shard: {len(axes)} axes for rank-{x.ndim} tensor {x.shape}")
+    spec = _resolve_spec(x.shape, axes, _CTX.act_rules, _CTX.mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_CTX.mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# Parameter specs (path-based)
+# --------------------------------------------------------------------------
+
+# (regex over "parent/leaf", base logical axes for the trailing dims)
+_PARAM_PATTERNS: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"embedding$", ("vocab", "embed")),
+    (r"(unembed|lm_head|head)/kernel$", ("embed", "vocab")),
+    (r"(unembed|lm_head|head)/u$", ("embed", "rank")),
+    (r"(unembed|lm_head|head)/v$", ("rank", "vocab")),
+    (r"wq/kernel$", ("embed", "heads")),
+    (r"wq/u$", ("embed", "rank")),
+    (r"wq/v$", ("rank", "heads")),
+    (r"(wk|wv)/kernel$", ("embed", "kv_heads")),
+    (r"(wk|wv)/u$", ("embed", "rank")),
+    (r"(wk|wv)/v$", ("rank", "kv_heads")),
+    (r"wo/kernel$", ("heads", "embed")),
+    (r"wo/u$", ("heads", "rank")),
+    (r"wo/v$", ("rank", "embed")),
+    (r"(gate|up|wi|in_proj)/kernel$", ("embed", "mlp")),
+    (r"(gate|up|wi|in_proj)/u$", ("embed", "rank")),
+    (r"(gate|up|wi|in_proj)/v$", ("rank", "mlp")),
+    (r"(down|out_proj)/kernel$", ("mlp", "embed")),
+    (r"(down|out_proj)/u$", ("mlp", "rank")),
+    (r"(down|out_proj)/v$", ("rank", "embed")),
+    # MLA latents: the latent dim behaves like a rank dim for sharding.
+    (r"(q_down|kv_down)/kernel$", ("embed", "rank")),
+    (r"(q_up|kv_up)/kernel$", ("rank", "heads")),
+    (r"(q_up|kv_up)/u$", (None, "rank")),
+    (r"(q_up|kv_up)/v$", ("rank", "heads")),
+    (r"router/kernel$", ("embed", None)),
+    (r"conv1d/kernel$", (None, "mlp")),
+    (r"wq/bias$", ("heads",)),
+    (r"(wk|wv)/bias$", ("kv_heads",)),
+    (r"(gate|up|wi|in_proj)/bias$", ("mlp",)),
+    (r"(down|out_proj|wo)/bias$", ("embed",)),
+    (r"(cross_wk|cross_wv)/kernel$", ("embed", "kv_heads")),
+)
+
+
+def _logical_axes_for(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    base: Optional[Tuple[Optional[str], ...]] = None
+    for pattern, axes in _PARAM_PATTERNS:
+        if re.search(pattern, path):
+            base = axes
+            break
+    if base is None:
+        base = (None,) * min(ndim, 2)
+    extra = ndim - len(base)
+    lead: Tuple[Optional[str], ...] = ()
+    if extra > 0:
+        # leading dims: expert stacks get the expert axis, layer stacks None
+        if "experts" in path:
+            lead = (None,) * (extra - 1) + ("expert",)
+        else:
+            lead = (None,) * extra
+    return lead + base
+
+
+def param_specs(params: Any, mesh: Optional[Mesh] = None,
+                rules: Optional[RuleTable] = None) -> Any:
+    """PartitionSpec pytree for a param tree (works on arrays or SDS)."""
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.param_rules or PARAM_RULES
+    assert mesh is not None, "param_specs needs a mesh (pass one or use axis_rules)"
+
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{path}/{k}" if path else k) for k, v in tree.items()}
+        axes = _logical_axes_for(path, tree.ndim)
+        return _resolve_spec(tree.shape, axes, rules, mesh)
+
+    return walk(params, "")
+
+
+def named_shardings(params: Any, mesh: Optional[Mesh] = None,
+                    rules: Optional[RuleTable] = None) -> Any:
+    mesh = mesh or _CTX.mesh
+    specs = param_specs(params, mesh, rules)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs,
+                                  is_leaf=lambda x: isinstance(x, P))

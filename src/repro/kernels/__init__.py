@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (decomposed linears)."""
+
+from repro.kernels.ops import lowrank_apply  # noqa: F401
+from repro.kernels.flash_attention import flash_attention  # noqa: F401

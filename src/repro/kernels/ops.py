@@ -1,0 +1,86 @@
+"""jit'd public wrappers around the Pallas kernels, with shape-legal
+fallbacks to the jnp reference path.
+
+``lowrank_apply`` is the single entry point every model layer uses for a
+factorized linear — it routes to the fused Pallas kernel when (a) the
+platform can run it (TPU, or interpret mode for validation) and (b) the
+shapes are block-divisible; otherwise it runs the mathematically identical
+jnp path (which XLA still fuses reasonably on TPU, and which is the only
+path exercised inside the 512-device SPMD dry-run — see DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.lowrank_matmul import lowrank_matmul
+
+__all__ = ["lowrank_apply", "kernel_available", "lowrank_matmul_vjp"]
+
+
+# Pallas kernels are not auto-differentiable: the fused forward pairs with a
+# jnp backward (recompute t = x@u; three matmuls — the standard fused-fwd /
+# composed-bwd pattern).
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def lowrank_matmul_vjp(x, u, v, block_m, block_k, block_n, interpret):
+    return lowrank_matmul(x, u, v, block_m=block_m, block_k=block_k,
+                          block_n=block_n, interpret=interpret)
+
+
+def _lr_fwd(x, u, v, block_m, block_k, block_n, interpret):
+    y = lowrank_matmul(x, u, v, block_m=block_m, block_k=block_k,
+                       block_n=block_n, interpret=interpret)
+    return y, (x, u, v)
+
+
+def _lr_bwd(block_m, block_k, block_n, interpret, res, dy):
+    x, u, v = res
+    f32 = jnp.float32
+    t = jnp.dot(x, u, preferred_element_type=f32).astype(x.dtype)  # recompute
+    dt = jnp.dot(dy, v.T, preferred_element_type=f32).astype(x.dtype)
+    dx = jnp.dot(dt, u.T, preferred_element_type=f32).astype(x.dtype)
+    du = jnp.dot(x.T, dt, preferred_element_type=f32).astype(u.dtype)
+    dv = jnp.dot(t.T, dy, preferred_element_type=f32).astype(v.dtype)
+    return dx, du, dv
+
+
+lowrank_matmul_vjp.defvjp(_lr_fwd, _lr_bwd)
+
+
+def kernel_available(platform: str | None = None) -> bool:
+    platform = platform or jax.default_backend()
+    return platform == "tpu"
+
+
+def _divisible(m: int, c: int, s: int, bm: int, bk: int, bn: int) -> bool:
+    return m % bm == 0 and c % bk == 0 and s % bn == 0
+
+
+def lowrank_apply(
+    x: jax.Array,
+    u: jax.Array,
+    v: jax.Array,
+    *,
+    use_kernel: bool | None = None,
+    interpret: bool = False,
+    block_m: int = 256,
+    block_k: int = 512,
+    block_n: int = 256,
+) -> jax.Array:
+    """y = (x @ u) @ v for arbitrary-batch x (..., C)."""
+    c, r = u.shape
+    s = v.shape[1]
+    lead = x.shape[:-1]
+    m = 1
+    for d in lead:
+        m *= d
+    use = use_kernel if use_kernel is not None else (kernel_available() or interpret)
+    if use and _divisible(m, c, s, block_m, block_k, block_n):
+        y = lowrank_matmul_vjp(x.reshape(m, c), u, v,
+                               block_m, block_k, block_n, interpret)
+        return y.reshape(*lead, s)
+    return ref.lowrank_matmul_ref(x.reshape(m, c), u, v).reshape(*lead, s)

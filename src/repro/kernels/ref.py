@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["lowrank_matmul_ref", "lowrank_gated_ffn_ref", "flash_attention_ref"]
+
+
+def lowrank_matmul_ref(x: jax.Array, u: jax.Array, v: jax.Array) -> jax.Array:
+    """y = (x @ U) @ V with float32 accumulation — the decomposed linear."""
+    t = jnp.dot(x, u, preferred_element_type=jnp.float32)
+    y = jnp.dot(t.astype(x.dtype), v, preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def lowrank_gated_ffn_ref(
+    x: jax.Array,
+    gu: jax.Array, gv: jax.Array,
+    uu: jax.Array, uv: jax.Array,
+) -> jax.Array:
+    """silu((x Ug) Vg) * ((x Uu) Vu) — fused low-rank SwiGLU first half."""
+    g = lowrank_matmul_ref(x, gu, gv)
+    up = lowrank_matmul_ref(x, uu, uv)
+    return (jax.nn.silu(g.astype(jnp.float32)) * up.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """Plain softmax attention oracle. q,k,v: (B, S, H, D) / (B, T, H, D)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

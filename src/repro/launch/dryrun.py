@@ -1,0 +1,284 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct stand-ins (no allocation), record memory/cost analysis and
+the post-SPMD HLO for the roofline harness.
+
+The XLA_FLAGS assignment above MUST precede every other import (jax locks
+the device count at first init).  One cell per process invocation keeps
+compile state isolated; ``--all`` orchestrates subprocesses with a JSON
+result cache so a failed cell never loses prior progress.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--out runs/dryrun]
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+DEFAULT_OUT = Path("runs/dryrun")
+
+
+def build_cell(arch: str, shape_name: str, *, multi_pod: bool, lrd: bool,
+               freeze: bool, fsdp: bool = True, remat: str = "sqrt",
+               microbatches: int = 0, grad_compression: str = "none",
+               param_layout: str = "fsdp", capacity_factor: float = 0.0,
+               attn_blocks: str = "", kv_int8: bool = False):
+    """Build (fn, args, mesh, run) for one dry-run cell."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import SHAPES, get_config, skip_reason
+    from repro.configs.base import DistConfig, LRDConfig, OptimConfig, RunConfig
+    from repro.launch import steps
+    from repro.launch.mesh import make_production_mesh
+
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        raise SystemExit(f"SKIP: {reason}")
+
+    cfg = get_config(arch)
+    if capacity_factor:
+        cfg = dataclasses.replace(cfg, capacity_factor=capacity_factor)
+    if attn_blocks:
+        bq, bkv = (int(x) for x in attn_blocks.split(","))
+        cfg = dataclasses.replace(cfg, attention_block_q=bq, attention_block_kv=bkv)
+    if kv_int8:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    shape = SHAPES[shape_name]
+    if microbatches == 0:  # auto: keep the remat stash (L*tokens*d/dev) ~<2GiB
+        microbatches = 1
+        if shape.kind == "train":
+            dp = 32 if multi_pod else 16  # batch-sharding ways (pod x data)
+            stash_per_dev = (cfg.num_layers * (shape.global_batch / dp)
+                             * shape.seq_len * cfg.d_model * 2)
+            while (stash_per_dev / microbatches > 2 * 2 ** 30
+                   and shape.global_batch % (microbatches * 2 * dp) == 0):
+                microbatches *= 2
+    run = RunConfig(
+        model=cfg,
+        shape=shape,
+        lrd=LRDConfig(enabled=lrd, alpha=2.0, rank_quantize=True,
+                      freeze_mode="sequential" if freeze else "none"),
+        dist=DistConfig(param_layout=param_layout,
+                        fsdp=fsdp, remat=remat if shape.kind == "train" else "none",
+                        # decode: shard the KV cache sequence over the model
+                        # axis (flash-decode style) — kv_heads rarely divide
+                        # the 16-way model axis, and a 32k cache at batch 128
+                        # is 1.4 TB for qwen2-72b.
+                        sequence_parallel=(shape.kind == "decode"),
+                        microbatches=microbatches,
+                        grad_compression=grad_compression,
+                        accum_dtype="bfloat16" if cfg.num_params() > 100e9
+                        else "float32"),
+        optim=OptimConfig(
+            name="adamw" if cfg.num_params() > 5e9 else "sgdm",
+            # >100B params: bf16 moments, the standard HBM trick (8-bit Adam
+            # territory) — fp32 m+v alone would be 10.5 GiB/chip for 340B.
+            state_dtype="bfloat16" if cfg.num_params() > 100e9 else "float32"),
+    )
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    if shape.kind == "train":
+        step = steps.build_train_step(run, mesh)
+        phase = 0 if freeze else -1
+        fn = functools.partial(step, phase=phase)
+        args = (steps.abstract_state(run, mesh), steps.batch_specs(run, mesh))
+        donate = (0,)  # donate TrainState: new params/opt alias the old buffers
+    elif shape.kind == "prefill":
+        fn = steps.build_prefill_step(run, mesh)
+        args = (steps.abstract_params(run, mesh), steps.batch_specs(run, mesh))
+        donate = ()
+    else:  # decode
+        fn = steps.build_serve_step(run, mesh)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.distributed.sharding import ACT_RULES, _resolve_spec
+        b = shape.global_batch
+        tok_spec = _resolve_spec((b, 1), ("batch", None), ACT_RULES, mesh)
+        token = jax.ShapeDtypeStruct((b, 1), jnp.int32,
+                                     sharding=NamedSharding(mesh, tok_spec))
+        pos = jax.ShapeDtypeStruct((), jnp.int32,
+                                   sharding=NamedSharding(mesh, P()))
+        args = (steps.abstract_params(run, mesh), steps.abstract_cache(run, mesh),
+                token, pos, steps.decode_extras_specs(run, mesh))
+        donate = (1,)  # donate the KV cache: updated in place
+    return fn, args, mesh, run, donate
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, lrd: bool = True,
+             freeze: bool = True, out_dir: Path = DEFAULT_OUT, tag: str = "",
+             save_hlo: bool = True, **build_kw) -> dict:
+    import jax
+
+    t0 = time.time()
+    fn, args, mesh, run, donate = build_cell(arch, shape_name, multi_pod=multi_pod,
+                                             lrd=lrd, freeze=freeze, **build_kw)
+    t_build = time.time() - t0
+
+    t0 = time.time()
+    lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    n_dev = mesh.devices.size
+    mesh_tag = "multipod" if multi_pod else "singlepod"
+    variant = ("lrd" if lrd else "dense") + (tag and f"-{tag}" or "")
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag, "variant": variant,
+        "devices": int(n_dev),
+        "status": "ok",
+        "seconds": {"build": round(t_build, 2), "lower": round(t_lower, 2),
+                    "compile": round(t_compile, 2)},
+        "memory_per_device": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "total_bytes": int(mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                               + mem.output_size_in_bytes),
+        },
+        "cost_analysis_per_device": {
+            "flops": float(cost.get("flops", -1.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+            "transcendentals": float(cost.get("transcendentals", -1.0)),
+        },
+    }
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    stem = f"{arch}__{shape_name}__{mesh_tag}__{variant}"
+    if save_hlo:
+        hlo_path = out_dir / f"{stem}.hlo.txt"
+        hlo_path.write_text(compiled.as_text())
+        result["hlo_path"] = str(hlo_path)
+    (out_dir / f"{stem}.json").write_text(json.dumps(result, indent=1))
+    return result
+
+
+def all_cells():
+    from repro.configs import SHAPES, get_config, skip_reason
+    from repro.configs.archs import ARCHS
+    for arch in ARCHS:
+        for shape in SHAPES:
+            yield arch, shape, skip_reason(arch, shape)
+
+
+def orchestrate(out_dir: Path, *, multi_pod_list=(False, True), lrd: bool = True,
+                force: bool = False, timeout_s: int = 2400):
+    """Subprocess-per-cell driver with a resume cache."""
+    import subprocess
+
+    results = []
+    for arch, shape, reason in all_cells():
+        for mp in multi_pod_list:
+            mesh_tag = "multipod" if mp else "singlepod"
+            variant = "lrd" if lrd else "dense"
+            stem = f"{arch}__{shape}__{mesh_tag}__{variant}"
+            cache = out_dir / f"{stem}.json"
+            if reason:
+                out_dir.mkdir(parents=True, exist_ok=True)
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_tag,
+                       "variant": variant, "status": "skip", "reason": reason}
+                cache.write_text(json.dumps(rec, indent=1))
+                results.append(rec)
+                continue
+            if cache.exists() and not force:
+                rec = json.loads(cache.read_text())
+                if rec.get("status") == "ok":
+                    results.append(rec)
+                    print(f"[cache] {stem}")
+                    continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+                   "--shape", shape, "--out", str(out_dir)]
+            if mp:
+                cmd.append("--multi-pod")
+            if not lrd:
+                cmd.append("--dense")
+            print(f"[run  ] {stem} ...", flush=True)
+            t0 = time.time()
+            proc = subprocess.run(cmd, capture_output=True, text=True,
+                                  timeout=timeout_s)
+            dt = time.time() - t0
+            if proc.returncode != 0:
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_tag,
+                       "variant": variant, "status": "fail",
+                       "stderr": proc.stderr[-4000:], "seconds": round(dt, 1)}
+                cache.write_text(json.dumps(rec, indent=1))
+                print(f"[FAIL ] {stem} ({dt:.0f}s)\n{proc.stderr[-1500:]}")
+            else:
+                rec = json.loads(cache.read_text())
+                print(f"[ok   ] {stem} ({dt:.0f}s)")
+            results.append(rec)
+    ok = sum(1 for r in results if r["status"] == "ok")
+    skip = sum(1 for r in results if r["status"] == "skip")
+    fail = sum(1 for r in results if r["status"] == "fail")
+    print(f"\ndry-run complete: {ok} ok, {skip} skip, {fail} fail "
+          f"/ {len(results)} cells")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--dense", action="store_true", help="disable LRD (baseline)")
+    ap.add_argument("--no-freeze", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--remat", default="sqrt",
+                    choices=["none", "full", "dots", "sqrt"])
+    ap.add_argument("--microbatches", type=int, default=0, help="0 = auto")
+    ap.add_argument("--grad-compression", default="none", choices=["none", "int8"])
+    ap.add_argument("--param-layout", default="fsdp", choices=["fsdp", "zero1"])
+    ap.add_argument("--capacity-factor", type=float, default=0.0)
+    ap.add_argument("--attn-blocks", default="", help="bq,bkv override")
+    ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    if args.all:
+        orchestrate(out, lrd=not args.dense, force=args.force)
+        return
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+    try:
+        res = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                       lrd=not args.dense, freeze=not args.no_freeze,
+                       out_dir=out, tag=args.tag, fsdp=not args.no_fsdp,
+                       remat=args.remat, microbatches=args.microbatches,
+                       grad_compression=args.grad_compression,
+                       param_layout=args.param_layout,
+                       capacity_factor=args.capacity_factor,
+                       attn_blocks=args.attn_blocks, kv_int8=args.kv_int8)
+    except SystemExit as e:
+        print(e)
+        return
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+    mem = res["memory_per_device"]
+    print(json.dumps(res, indent=1))
+    print(f"\n{res['arch']} {res['shape']} {res['mesh']} [{res['variant']}]: "
+          f"per-device {mem['total_bytes']/2**30:.2f} GiB "
+          f"(args {mem['argument_bytes']/2**30:.2f} + temp {mem['temp_bytes']/2**30:.2f}), "
+          f"flops/dev {res['cost_analysis_per_device']['flops']:.3e}")
+
+
+if __name__ == "__main__":
+    main()

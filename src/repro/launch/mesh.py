@@ -1,0 +1,26 @@
+"""Production meshes.  Functions, not module constants — importing this
+module never touches jax device state (required for the dry-run's
+XLA_FLAGS ordering; see dryrun.py)."""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16) '(data, model)' single pod; (2,16,16) '(pod, data, model)'
+    for the 512-chip two-pod config.  The pod axis is pure DP over DCN;
+    growing it is how the design scales to N pods (DESIGN.md §5)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over the locally available devices (tests / CPU runs)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, n // data)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

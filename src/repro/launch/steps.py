@@ -1,0 +1,328 @@
+"""Step builders: train_step / prefill_step / serve_step per RunConfig,
+plus abstract ``input_specs`` (ShapeDtypeStruct stand-ins with shardings —
+the dry-run lowers against these, no allocation ever happens).
+
+The sequential-freezing phase is a STATIC argument: the returned train_step
+is ``step_fn(phase)(state, batch)``; each phase compiles once and XLA
+dead-code-eliminates the frozen factors' backward + optimizer update
+(DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import RunConfig
+from repro.core import freezing
+from repro.core.decompose import Decomposer
+from repro.core.policy import LM_DEFAULT, NO_LRD
+from repro.distributed import (ACT_RULES, ACT_RULES_SP, PARAM_RULES,
+                               PARAM_RULES_NO_FSDP, axis_rules, param_specs, shard)
+from repro.distributed.compression import value_and_grad_compressed
+from repro.models import encdec as encdec_mod, lm
+from repro.models.common import cross_entropy
+from repro.optim import init_optimizer
+from repro.optim.optimizers import apply_updates
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+
+
+def make_decomposer(run: RunConfig) -> Decomposer:
+    policy = (LM_DEFAULT.with_alpha(run.lrd.alpha)
+              .with_quantize(run.lrd.rank_quantize)
+              .with_min_dim(run.lrd.min_dim)) if run.lrd.enabled else NO_LRD
+    return Decomposer(policy, dtype=run.model.pdtype)
+
+
+def init_params(run: RunConfig, key=None):
+    key = key if key is not None else jax.random.PRNGKey(run.seed)
+    dec = make_decomposer(run)
+    if run.model.family == "encdec":
+        params = encdec_mod.encdec_init(key, run.model, dec)
+    else:
+        params = lm.lm_init(key, run.model, dec)
+    return params, dec.plan
+
+
+# --------------------------------------------------------------------------
+# forward dispatch (family-aware)
+# --------------------------------------------------------------------------
+
+def _forward_full(params, batch, run: RunConfig, *, return_hidden=False,
+                  mode: str = "full"):
+    cfg = run.model
+    kw = dict(remat=run.dist.remat, use_pallas=run.lrd.use_pallas_kernel)
+    if cfg.family == "encdec":
+        memory = encdec_mod.encode(params, batch["frames"], cfg,
+                                   remat=run.dist.remat)
+        logits, cache = encdec_mod.decode(params, batch["tokens"], memory, cfg,
+                                          mode=mode, **kw)
+        return logits, cache, jnp.zeros((), jnp.float32), None
+    out = lm.lm_apply(params, batch["tokens"], cfg, mode=mode,
+                      vision_embeddings=batch.get("vision_embeddings"),
+                      return_hidden=return_hidden, **kw)
+    if return_hidden:
+        logits, cache, aux, hidden = out
+        return logits, cache, aux, hidden
+    logits, cache, aux = out
+    return logits, cache, aux, None
+
+
+def _loss_fn(params, batch, run: RunConfig, phase: int):
+    cfg = run.model
+    if phase >= 0:
+        mask = freezing.freeze_mask(params, phase)
+        params = freezing.apply_freeze(params, mask)
+    need_h = cfg.use_mtp
+    logits, _, aux, hidden = _forward_full(params, batch, run,
+                                           return_hidden=need_h, mode="train")
+    loss = cross_entropy(logits, batch["labels"])
+    if cfg.use_mtp:
+        mtp_lg = lm.mtp_logits(params, hidden, batch["tokens"], cfg,
+                               use_pallas=run.lrd.use_pallas_kernel)
+        # padded shift-by-one: predict labels shifted left, mask last 2 slots
+        mtp_labels = jnp.roll(batch["labels"], -1, axis=1)
+        loss = loss + cfg.mtp_loss_weight * cross_entropy(
+            mtp_lg, mtp_labels, mask=lm.mtp_loss_mask(batch["tokens"]))
+    if cfg.num_experts:
+        loss = loss + 0.01 * aux
+    return loss
+
+
+# --------------------------------------------------------------------------
+# train
+# --------------------------------------------------------------------------
+
+def _param_rules(run: RunConfig):
+    if run.dist.param_layout == "zero1":
+        return PARAM_RULES_NO_FSDP
+    return PARAM_RULES if run.dist.fsdp else PARAM_RULES_NO_FSDP
+
+
+def _opt_rules(run: RunConfig):
+    # ZeRO-1: optimizer state (and grad accumulators) sharded over data too.
+    if run.dist.param_layout == "zero1":
+        return PARAM_RULES
+    return _param_rules(run)
+
+
+def build_train_step(run: RunConfig, mesh):
+    """Returns step(phase) -> fn(state, batch) -> (state, metrics)."""
+
+    def train_step(state: TrainState, batch, *, phase: int):
+        act = ACT_RULES_SP if run.dist.sequence_parallel else ACT_RULES
+        prm = _param_rules(run)
+        with axis_rules(mesh, act=act, params=prm):
+            loss_for = functools.partial(_loss_fn, run=run, phase=phase)
+
+            m = run.dist.microbatches
+            if m > 1:
+                # grad accumulators must carry explicit shardings — an
+                # unconstrained scan carry ends up replicated (measured
+                # 26 GiB/device for qwen2-72b's down-proj factor alone).
+                # Under ZeRO-1 they take the optimizer-state (data-sharded)
+                # layout: the per-microbatch add lowers to a reduce-scatter.
+                gspecs = param_specs(state.params, mesh, _opt_rules(run))
+                pin = lambda t: jax.tree_util.tree_map(
+                    lambda x, sp: jax.lax.with_sharding_constraint(
+                        x, NamedSharding(mesh, sp)), t, gspecs)
+
+                # Microbatches ride the scan xs via a (m, B/m, ...) reshape —
+                # a dynamic_slice along the SHARDED batch dim would force XLA
+                # to all-gather the whole batch per microbatch (measured:
+                # 32 GiB fp32 replica of vision_embeddings on the VLM cell).
+                def regroup(x):
+                    y = x.reshape((m, x.shape[0] // m) + x.shape[1:])
+                    return shard(y, None, "batch", *([None] * (y.ndim - 2)))
+
+                batch_r = jax.tree_util.tree_map(regroup, batch)
+
+                adt = jnp.dtype(run.dist.accum_dtype)
+
+                def acc_body(carry, mb):
+                    gsum, lsum = carry
+                    l, g = jax.value_and_grad(loss_for)(state.params, mb)
+                    gsum = pin(jax.tree_util.tree_map(
+                        lambda a, b: (a + b.astype(adt)), gsum, g))
+                    return (gsum, lsum + l), None
+
+                zeros = pin(jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, adt), state.params))
+                (gsum, lsum), _ = jax.lax.scan(
+                    acc_body, (zeros, jnp.zeros((), jnp.float32)), batch_r)
+                loss = lsum / m
+                grads = jax.tree_util.tree_map(lambda g: g / m, gsum)
+            else:
+                loss, grads = value_and_grad_compressed(
+                    loss_for, state.params, batch, mesh, run.dist.grad_compression)
+
+            mask = (freezing.freeze_mask(state.params, phase) if phase >= 0 else None)
+            new_params, new_opt = apply_updates(run.optim, state.params, grads,
+                                                state.opt, mask)
+            # square in the grad dtype, accumulate in f32: a f32 pre-cast
+            # materializes a full fp32 copy of every grad leaf at once
+            # (measured +5 GiB/device on deepseek-v3).
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g), dtype=jnp.float32)
+                for g in jax.tree_util.tree_leaves(grads)))
+            return TrainState(new_params, new_opt), {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+# --------------------------------------------------------------------------
+# prefill / decode
+# --------------------------------------------------------------------------
+
+def build_prefill_step(run: RunConfig, mesh):
+    def prefill_step(params, batch):
+        act = ACT_RULES_SP if run.dist.sequence_parallel else ACT_RULES
+        with axis_rules(mesh, act=act, params=_param_rules(run)):
+            logits, cache, _, _ = _forward_full(params, batch, run)
+            return logits[:, -1], cache
+
+    return prefill_step
+
+
+def build_serve_step(run: RunConfig, mesh):
+    cfg = run.model
+
+    def serve_step(params, cache, token, pos, extras=None):
+        act = ACT_RULES_SP if run.dist.sequence_parallel else ACT_RULES
+        with axis_rules(mesh, act=act, params=_param_rules(run)):
+            kw = dict(use_pallas=run.lrd.use_pallas_kernel)
+            if cfg.family == "encdec":
+                memory = (extras or {}).get("memory")
+                logits, new_cache = encdec_mod.decode(
+                    params, token, memory, cfg, mode="decode", cache=cache,
+                    pos=pos, **kw)
+            else:
+                logits, new_cache, _ = lm.lm_apply(
+                    params, token, cfg, mode="decode", cache=cache, pos=pos,
+                    vision_embeddings=(extras or {}).get("vision_embeddings"), **kw)
+            next_token = jnp.argmax(logits[:, -1:], axis=-1).astype(token.dtype)
+            return logits, new_cache, next_token
+
+    return serve_step
+
+
+# --------------------------------------------------------------------------
+# abstract input specs (dry-run)
+# --------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def batch_specs(run: RunConfig, mesh) -> Dict[str, jax.ShapeDtypeStruct]:
+    from repro.distributed.sharding import _resolve_spec
+    cfg, shp = run.model, run.shape
+    b, s = shp.global_batch, shp.seq_len
+    sp2 = _resolve_spec((b, s), ("batch", None), ACT_RULES, mesh)
+    out = {
+        "tokens": _sds((b, s), jnp.int32, mesh, sp2),
+        "labels": _sds((b, s), jnp.int32, mesh, sp2),
+    }
+    sp3 = _resolve_spec((b, 1, 1), ("batch", None, None), ACT_RULES, mesh)
+    if cfg.family == "encdec":
+        out["frames"] = _sds((b, cfg.encoder_frames, cfg.d_model), cfg.cdtype,
+                             mesh, sp3)
+    if cfg.family == "vlm":
+        out["vision_embeddings"] = _sds((b, cfg.num_image_tokens, cfg.d_model),
+                                        cfg.cdtype, mesh, sp3)
+    return out
+
+
+_CACHE_AXES = {
+    "k": (None, "batch", "kv_seq", "kv_heads", None),
+    "v": (None, "batch", "kv_seq", "kv_heads", None),
+    "k_scale": (None, "batch", "kv_seq", "kv_heads", None),
+    "v_scale": (None, "batch", "kv_seq", "kv_heads", None),
+    "ckv": (None, "batch", "kv_seq", None),
+    "kr": (None, "batch", "kv_seq", None),
+    "ssm": (None, "batch", "heads", None, None),
+    "conv": (None, "batch", None, "mlp"),
+    "c": (None, "batch", "heads", None, None),
+    "n": (None, "batch", "heads", None),
+    "m": (None, "batch", "heads"),
+}
+
+
+def cache_specs(cache_shapes, run: RunConfig, mesh):
+    from repro.distributed.sharding import _resolve_spec
+    act = ACT_RULES_SP if run.dist.sequence_parallel else ACT_RULES
+
+    def walk(tree, name):
+        if isinstance(tree, dict):
+            return {k: walk(v, k) for k, v in tree.items()}
+        axes = _CACHE_AXES.get(name, (None,) * tree.ndim)
+        axes = (None,) * (tree.ndim - len(axes)) + axes[-tree.ndim:] \
+            if tree.ndim >= len(axes) else axes[-tree.ndim:]
+        spec = _resolve_spec(tree.shape, axes, act, mesh)
+        return jax.ShapeDtypeStruct(tree.shape, tree.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    return walk(cache_shapes, "")
+
+
+def abstract_params(run: RunConfig, mesh):
+    """eval_shape over init + attach param-layout shardings."""
+    shapes = jax.eval_shape(lambda: init_params(run)[0])
+    specs = param_specs(shapes, mesh, _param_rules(run))
+    return jax.tree_util.tree_map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        shapes, specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def abstract_state(run: RunConfig, mesh):
+    aparams = abstract_params(run, mesh)
+    opt_shapes = jax.eval_shape(lambda p: init_optimizer(run.optim, p), aparams)
+    ospecs = param_specs(aparams, mesh, _opt_rules(run))
+
+    def attach(shapes):
+        return jax.tree_util.tree_map(
+            lambda s, sp: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+            shapes, ospecs)
+
+    mu = attach(opt_shapes.mu)
+    nu = attach(opt_shapes.nu) if opt_shapes.nu != () else ()
+    from repro.optim.optimizers import OptState
+    step_s = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+    return TrainState(aparams, OptState(step_s, mu, nu))
+
+
+def abstract_cache(run: RunConfig, mesh):
+    cfg, shp = run.model, run.shape
+    if cfg.family == "encdec":
+        shapes = jax.eval_shape(
+            lambda: encdec_mod.encdec_init_cache(cfg, shp.global_batch, shp.seq_len))
+    else:
+        shapes = jax.eval_shape(
+            lambda: lm.init_cache(cfg, shp.global_batch, shp.seq_len))
+    return cache_specs(shapes, run, mesh)
+
+
+def decode_extras_specs(run: RunConfig, mesh):
+    from repro.distributed.sharding import _resolve_spec
+    cfg, shp = run.model, run.shape
+    sp3 = _resolve_spec((shp.global_batch, 1, 1), ("batch", None, None),
+                        ACT_RULES, mesh)
+    if cfg.family == "encdec":
+        return {"memory": _sds((shp.global_batch, cfg.encoder_frames, cfg.d_model),
+                               cfg.cdtype, mesh, sp3)}
+    if cfg.family == "vlm":
+        return {"vision_embeddings": _sds(
+            (shp.global_batch, cfg.num_image_tokens, cfg.d_model),
+            cfg.cdtype, mesh, sp3)}
+    return None

@@ -1,0 +1,181 @@
+"""Production training driver.
+
+Fault tolerance: auto-resume from the newest complete checkpoint (params,
+optimizer, data-iterator state, freeze phase), atomic saves, SIGTERM =>
+checkpoint-then-exit (preemption), straggler detection via per-step timing
+EMA.  Elastic: checkpoints are mesh-agnostic, so restarting with a different
+device count re-shards on load.
+
+Sequential freezing (paper Algorithm 2) drives a *static* phase argument:
+one compiled step per phase, swapped per epoch.
+
+Usage (CPU demo):
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+      --steps 200 --global-batch 8 --seq-len 128 --lrd --freeze sequential
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import SHAPES, get_config, get_smoke_config
+from repro.configs.base import (DistConfig, LRDConfig, OptimConfig, RunConfig,
+                                ShapeConfig)
+from repro.core.freezing import FreezeMode, phase_for_epoch
+from repro.data import LMBatchIterator
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.optim import init_optimizer
+
+
+class StragglerMonitor:
+    """Flags steps slower than ``factor`` x the running median step time.
+
+    On a real multi-host deployment each host reports its step time into this
+    monitor (via the coordination service); the launcher re-slices around
+    hosts that stay flagged.  Single-process mode exercises the same logic.
+    """
+
+    def __init__(self, factor: float = 2.0, window: int = 32):
+        self.factor = factor
+        self.times: list = []
+        self.window = window
+        self.flagged = 0
+
+    def observe(self, dt: float) -> bool:
+        self.times.append(dt)
+        self.times = self.times[-self.window:]
+        if len(self.times) < 8:
+            return False
+        med = float(np.median(self.times))
+        if dt > self.factor * med:
+            self.flagged += 1
+            return True
+        return False
+
+
+def build_run(args) -> RunConfig:
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    shape = ShapeConfig("custom", args.seq_len, args.global_batch, "train")
+    return RunConfig(
+        model=cfg,
+        shape=shape,
+        lrd=LRDConfig(enabled=args.lrd, alpha=args.alpha,
+                      rank_quantize=not args.no_rank_opt,
+                      freeze_mode=args.freeze, min_dim=args.lrd_min_dim),
+        dist=DistConfig(fsdp=args.fsdp, remat=args.remat,
+                        microbatches=args.microbatches,
+                        grad_compression=args.grad_compression),
+        optim=OptimConfig(name=args.optimizer, lr=args.lr,
+                          warmup_steps=args.warmup,
+                          total_steps=args.steps),
+        seed=args.seed,
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--steps-per-epoch", type=int, default=25)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lrd", action="store_true")
+    ap.add_argument("--alpha", type=float, default=2.0)
+    ap.add_argument("--no-rank-opt", action="store_true")
+    ap.add_argument("--lrd-min-dim", type=int, default=128)
+    ap.add_argument("--freeze", default="none",
+                    choices=["none", "regular", "sequential"])
+    ap.add_argument("--optimizer", default="sgdm", choices=["sgdm", "adamw"])
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--warmup", type=int, default=10)
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--remat", default="none", choices=["none", "full", "dots", "sqrt"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", default="none", choices=["none", "int8"])
+    ap.add_argument("--mesh", default="host", choices=["host", "production"])
+    ap.add_argument("--ckpt-dir", default="runs/train_ckpt")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    run = build_run(args)
+    mesh = (make_production_mesh() if args.mesh == "production"
+            else make_host_mesh(len(jax.devices()), 1))
+
+    params, plan = steps_mod.init_params(run)
+    if run.lrd.enabled:
+        print(plan.summary())
+    opt = init_optimizer(run.optim, params)
+    state = steps_mod.TrainState(params, opt)
+
+    data = LMBatchIterator(run.model.vocab_size, run.shape.seq_len,
+                           run.shape.global_batch, seed=args.seed + 17)
+
+    ckpt = CheckpointManager(Path(args.ckpt_dir) / f"{run.model.name}", keep=3,
+                             save_every=args.save_every)
+    ckpt.install_sigterm_handler()
+    start_step = 0
+    restored = ckpt.restore()
+    if restored is not None:
+        saved_state, start_step, extra = restored
+        # namedtuples round-trip as plain tuples: rebuild the typed wrappers
+        from repro.optim.optimizers import OptState
+        params_r, opt_r = saved_state
+        put = lambda t: jax.tree_util.tree_map(
+            lambda x: jax.device_put(np.asarray(x)), t)
+        state = steps_mod.TrainState(put(params_r),
+                                     OptState(put(opt_r[0]), put(opt_r[1]),
+                                              put(opt_r[2])))
+        data.load_state_dict(extra["data"])
+        print(f"[resume] from step {start_step}")
+
+    train_step = steps_mod.build_train_step(run, mesh)
+    step_fns = {}
+
+    def fn_for(phase: int):
+        if phase not in step_fns:
+            step_fns[phase] = jax.jit(functools.partial(train_step, phase=phase),
+                                      donate_argnums=(0,))
+        return step_fns[phase]
+
+    monitor = StragglerMonitor()
+    it = iter(data)
+    losses = []
+    for step in range(start_step, args.steps):
+        epoch = step // args.steps_per_epoch
+        phase = phase_for_epoch(epoch, FreezeMode(run.lrd.freeze_mode)) \
+            if run.lrd.enabled else -1
+        batch = {k: jax.device_put(v) for k, v in next(it).items()}
+        t0 = time.perf_counter()
+        state, metrics = fn_for(phase)(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        losses.append(loss)
+        if monitor.observe(dt):
+            print(f"[straggler] step {step}: {dt*1e3:.0f}ms "
+                  f"(median {np.median(monitor.times)*1e3:.0f}ms)")
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} epoch {epoch:3d} phase {phase:2d} "
+                  f"loss {loss:.4f} gnorm {float(metrics['grad_norm']):.3f} "
+                  f"{dt*1e3:.0f}ms")
+        if ckpt.maybe_save(step + 1, state, extra={"data": data.state_dict()}):
+            if ckpt.preempted:
+                print(f"[preempt] checkpointed at step {step + 1}, exiting")
+                return state, losses
+    print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    return state, losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Pure-JAX functional model zoo (no flax): params are nested dicts,
+layers are ``init``/``apply`` function pairs, stacks are scanned."""

@@ -1,0 +1,108 @@
+"""ResNet-50/101/152 — the paper's own experimental models (Table 1-3).
+
+NHWC, HWIO kernels; BatchNorm folded into a per-channel scale/bias
+("inference-style" norm — the benchmarks measure throughput/convergence, not
+BN statistics).  Every conv/fc goes through Tucker/SVD-decomposable param
+groups so the paper's pipeline (LRD -> rank opt -> freezing) applies as-is.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decompose import Decomposer
+from repro.models.common import Params
+
+STAGES = {
+    "resnet50": (3, 4, 6, 3),
+    "resnet101": (3, 4, 23, 3),
+    "resnet152": (3, 8, 36, 3),
+}
+
+
+def conv_apply(p: Params, x: jax.Array, stride: int = 1) -> jax.Array:
+    """x: NHWC. Dense kernel or Tucker triple {first, core, last} or SVD u/v."""
+
+    def conv(x_, k_, s_):
+        return jax.lax.conv_general_dilated(
+            x_.astype(jnp.float32), k_.astype(jnp.float32), (s_, s_), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    if "kernel" in p:
+        y = conv(x, p["kernel"], stride)
+    elif "first" in p:  # Tucker-2: 1x1 -> kxk core -> 1x1 (paper Fig. 1)
+        y = jnp.einsum("bhwc,cr->bhwr", x.astype(jnp.float32), p["first"].astype(jnp.float32))
+        y = conv(y, p["core"], stride)
+        y = jnp.einsum("bhwr,rs->bhws", y, p["last"].astype(jnp.float32))
+    else:  # SVD pair (1x1 conv == FC)
+        y = jnp.einsum("bhwc,cr->bhwr", x.astype(jnp.float32), p["u"].astype(jnp.float32))
+        if stride > 1:
+            y = y[:, ::stride, ::stride]
+        y = jnp.einsum("bhwr,rs->bhws", y, p["v"].astype(jnp.float32))
+    if "scale" in p:  # folded BN
+        y = y * p["scale"].astype(jnp.float32) + p["bn_bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def _conv_init(dec, key, path, c, s, k, dtype, *, bn=True) -> Params:
+    p = dec.conv(key, path, c, s, k, dtype=dtype)
+    if bn:
+        p["scale"] = jnp.ones((s,), dtype)
+        p["bn_bias"] = jnp.zeros((s,), dtype)
+    return p
+
+
+def bottleneck_init(dec, key, path, c_in, c_mid, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    c_out = c_mid * 4
+    p = {
+        "conv1x1_a": _conv_init(dec, ks[0], f"{path}/conv1x1_a", c_in, c_mid, 1, dtype),
+        "conv3x3": _conv_init(dec, ks[1], f"{path}/conv3x3", c_mid, c_mid, 3, dtype),
+        "conv1x1_b": _conv_init(dec, ks[2], f"{path}/conv1x1_b", c_mid, c_out, 1, dtype),
+    }
+    if c_in != c_out:
+        p["shortcut"] = _conv_init(dec, ks[3], f"{path}/shortcut", c_in, c_out, 1, dtype)
+    return p
+
+
+def bottleneck_apply(p: Params, x: jax.Array, stride: int) -> jax.Array:
+    h = jax.nn.relu(conv_apply(p["conv1x1_a"], x))
+    h = jax.nn.relu(conv_apply(p["conv3x3"], h, stride))
+    h = conv_apply(p["conv1x1_b"], h)
+    sc = conv_apply(p["shortcut"], x, stride) if "shortcut" in p else (
+        x if stride == 1 else x[:, ::stride, ::stride])
+    return jax.nn.relu(h + sc)
+
+
+def resnet_init(key, variant: str, num_classes: int, dec: Decomposer,
+                dtype=jnp.float32) -> Params:
+    stages = STAGES[variant]
+    ks = jax.random.split(key, sum(stages) + 2)
+    ki = iter(range(len(ks)))
+    p: Params = {"conv_stem": _conv_init(dec, ks[next(ki)], "conv_stem", 3, 64, 7, dtype)}
+    c_in = 64
+    for si, (blocks, c_mid) in enumerate(zip(stages, (64, 128, 256, 512))):
+        for bi in range(blocks):
+            p[f"s{si}b{bi}"] = bottleneck_init(
+                dec, ks[next(ki)], f"stage{si}/block{bi}", c_in, c_mid, dtype)
+            c_in = c_mid * 4
+    p["fc"] = dec.linear(ks[next(ki)], "fc", c_in, num_classes, bias=True, dtype=dtype)
+    return p
+
+
+def resnet_apply(p: Params, x: jax.Array, variant: str) -> jax.Array:
+    """x: (B, H, W, 3) -> logits (B, num_classes)."""
+    from repro.models.common import linear
+
+    stages = STAGES[variant]
+    h = jax.nn.relu(conv_apply(p["conv_stem"], x, stride=2))
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME")
+    for si, blocks in enumerate(stages):
+        for bi in range(blocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            h = bottleneck_apply(p[f"s{si}b{bi}"], h, stride)
+    h = jnp.mean(h, axis=(1, 2))
+    return linear(p["fc"], h)

@@ -1,0 +1,311 @@
+"""State-space blocks: Mamba2 (zamba2 hybrid) and mLSTM (xLSTM).
+
+Mamba2 uses the chunked SSD formulation for train/prefill (quadratic within
+a chunk, linear across chunks — MXU-friendly einsums instead of a 4096-step
+scalar scan) and an O(1) recurrent update for decode.  mLSTM uses a
+stabilized exponential-gating matrix-memory recurrence (step scan for
+train — the chunkwise-parallel form is a recorded §Perf iteration) and the
+same recurrence for decode.
+
+All in/out projections route through ``common.linear`` -> LRD-aware.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import shard
+from repro.models.common import Params, linear, rmsnorm, rmsnorm_init
+
+
+# --------------------------------------------------------------------------
+# depthwise causal conv1d
+# --------------------------------------------------------------------------
+
+def conv1d_init(key, width: int, channels: int, dtype) -> Params:
+    k = jax.random.normal(key, (width, channels), jnp.float32) * (width ** -0.5)
+    return {"kernel": k.astype(dtype)}
+
+
+def conv1d_apply(p: Params, x: jax.Array) -> jax.Array:
+    """Causal depthwise conv; x: (B, S, C)."""
+    w = p["kernel"]  # (W, C)
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    kernel = w[:, None, :]  # (W, I=1, O=C) with feature_group_count=C
+    y = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32), kernel.astype(jnp.float32),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=w.shape[1])
+    return y.astype(x.dtype)
+
+
+def conv1d_step(p: Params, conv_state: jax.Array, x_t: jax.Array):
+    """conv_state: (B, W-1, C); x_t: (B, 1, C) -> (y_t, new_state)."""
+    w = p["kernel"].astype(jnp.float32)
+    window = jnp.concatenate([conv_state, x_t], axis=1)  # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w)[:, None]
+    return y.astype(x_t.dtype), window[:, 1:]
+
+
+# --------------------------------------------------------------------------
+# Mamba2
+# --------------------------------------------------------------------------
+
+def mamba2_init(dec, key, path: str, cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    nh = di // cfg.ssm_head_dim
+    g = 1  # single B/C group
+    conv_dim = di + 2 * g * cfg.ssm_state
+    proj_out = 2 * di + 2 * g * cfg.ssm_state + nh
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "norm": {k_: (jnp.broadcast_to(v_, stack + v_.shape) if stack else v_)
+                 for k_, v_ in rmsnorm_init(d, cfg.pdtype).items()},
+        "in_proj": dec.linear(ks[0], f"{path}/in_proj", d, proj_out, stack=stack),
+        "conv1d": {"kernel": jnp.broadcast_to(
+            conv1d_init(ks[1], cfg.ssm_conv_width, conv_dim, cfg.pdtype)["kernel"],
+            stack + (cfg.ssm_conv_width, conv_dim)) if stack else
+            conv1d_init(ks[1], cfg.ssm_conv_width, conv_dim, cfg.pdtype)["kernel"]},
+        "out_proj": dec.linear(ks[2], f"{path}/out_proj", di, d, stack=stack),
+        "A_log": jnp.broadcast_to(jnp.zeros((nh,), jnp.float32), stack + (nh,)),
+        "D": jnp.broadcast_to(jnp.ones((nh,), jnp.float32), stack + (nh,)),
+        "dt_bias": jnp.broadcast_to(jnp.zeros((nh,), jnp.float32), stack + (nh,)),
+        "gate_norm": {k_: (jnp.broadcast_to(v_, stack + v_.shape) if stack else v_)
+                      for k_, v_ in rmsnorm_init(di, cfg.pdtype).items()},
+    }
+    return p
+
+
+def _ssd_chunked(x, dt, A_log, B, C, D, chunk: int,
+                 init_state: Optional[jax.Array] = None):
+    """Minimal chunked SSD.  x:(b,s,h,p) dt:(b,s,h) B,C:(b,s,h,N).
+
+    Returns (y (b,s,h,p), final_state (b,h,N,p)).
+    """
+    b, s, h, pdim = x.shape
+    n = B.shape[-1]
+    nc = s // chunk
+    A = -jnp.exp(A_log.astype(jnp.float32))  # (h,)
+    dA = dt.astype(jnp.float32) * A  # (b,s,h)
+
+    xr = x.reshape(b, nc, chunk, h, pdim).astype(jnp.float32)
+    dtr = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Br = B.reshape(b, nc, chunk, h, n).astype(jnp.float32)
+    Cr = C.reshape(b, nc, chunk, h, n).astype(jnp.float32)
+    dAr = dA.reshape(b, nc, chunk, h)
+
+    a_cs = jnp.cumsum(dAr, axis=2)  # (b,nc,q,h)
+    a_tot = a_cs[:, :, -1]  # (b,nc,h)
+
+    # intra-chunk (quadratic within chunk)
+    diff = a_cs[:, :, :, None, :] - a_cs[:, :, None, :, :]  # (b,nc,i,j,h)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    G = jnp.einsum("bcihn,bcjhn->bcijh", Cr, Br)
+    M = G * L * dtr[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xr)
+
+    # local chunk states
+    decay = jnp.exp(a_tot[:, :, None, :] - a_cs)  # (b,nc,q,h)
+    s_loc = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp", decay * dtr, Br, xr)
+
+    # inter-chunk recurrence
+    s0 = (init_state.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((b, h, n, pdim), jnp.float32))
+
+    def step(sp, inp):
+        a_c, s_c = inp  # (b,h), (b,h,n,p)
+        s_new = jnp.exp(a_c)[..., None, None] * sp + s_c
+        return s_new, sp  # emit state *entering* the chunk
+
+    (s_fin, s_prev) = jax.lax.scan(
+        step, s0, (jnp.moveaxis(a_tot, 1, 0), jnp.moveaxis(s_loc, 1, 0)))
+    s_prev = jnp.moveaxis(s_prev, 0, 1)  # (b,nc,h,n,p)
+
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp", Cr * jnp.exp(a_cs)[..., None], s_prev)
+    y = (y_intra + y_inter).reshape(b, s, h, pdim)
+    y = y + D.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), s_fin
+
+
+def _pick_chunk(s: int, chunk: int) -> int:
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    return max(c, 1)
+
+
+def _mamba2_project(p, x, cfg, use_pallas):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    nh = di // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    zxbcdt = linear(p["in_proj"], x, use_pallas=use_pallas)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n:]
+    return z, xbc, dt, di, nh, n
+
+
+def _mamba2_split_xbc(xbc, di, n, nh, hd):
+    x_in = xbc[..., :di]
+    B = xbc[..., di:di + n]
+    C = xbc[..., di + n:]
+    b, s = x_in.shape[0], x_in.shape[1]
+    xh = x_in.reshape(b, s, nh, hd)
+    Bh = jnp.broadcast_to(B[:, :, None, :], (b, s, nh, n))
+    Ch = jnp.broadcast_to(C[:, :, None, :], (b, s, nh, n))
+    return xh, Bh, Ch
+
+
+def mamba2_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                 mode: str = "full", state: Optional[Params] = None,
+                 use_pallas: bool = False) -> Tuple[jax.Array, Params]:
+    """x: (B,S,d).  mode 'full' -> chunked SSD; 'decode' (S==1) -> recurrence."""
+    hd = cfg.ssm_head_dim
+    h_in = rmsnorm(p["norm"], x, cfg.norm_eps)
+    z, xbc, dt_raw, di, nh, n = _mamba2_project(p, h_in, cfg, use_pallas)
+
+    if mode == "full":
+        xbc = jax.nn.silu(conv1d_apply(p["conv1d"], xbc).astype(jnp.float32)).astype(x.dtype)
+        xh, Bh, Ch = _mamba2_split_xbc(xbc, di, n, nh, hd)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+        xh = shard(xh, "batch", "seq", "heads", None)
+        chunk = _pick_chunk(x.shape[1], cfg.ssm_chunk)
+        y, s_fin = _ssd_chunked(xh, dt, p["A_log"], Bh, Ch, p["D"], chunk,
+                                init_state=state.get("ssm") if state else None)
+        new_state = {
+            "ssm": s_fin.astype(x.dtype),
+            "conv": xbc_tail(p, h_in, cfg, di, n, use_pallas),
+        }
+    else:
+        assert state is not None
+        conv_in = xbc  # (B,1,conv_dim)
+        y_c, conv_state = conv1d_step(p["conv1d"], state["conv"], conv_in)
+        xbc_t = jax.nn.silu(y_c.astype(jnp.float32)).astype(x.dtype)
+        xh, Bh, Ch = _mamba2_split_xbc(xbc_t, di, n, nh, hd)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        dA = jnp.exp(dt[:, 0] * A)  # (B,nh)
+        ssm = state["ssm"].astype(jnp.float32)  # (B,nh,N,hd)
+        upd = jnp.einsum("bh,bhn,bhp->bhnp", dt[:, 0], Bh[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        ssm = dA[..., None, None] * ssm + upd
+        y = jnp.einsum("bhn,bhnp->bhp", Ch[:, 0].astype(jnp.float32), ssm)
+        y = y + p["D"].astype(jnp.float32)[None, :, None] * xh[:, 0].astype(jnp.float32)
+        y = y[:, None].astype(x.dtype)
+        new_state = {"ssm": ssm.astype(x.dtype), "conv": conv_state}
+
+    b, s = x.shape[0], x.shape[1]
+    y = y.reshape(b, s, di)
+    y = rmsnorm(p["gate_norm"], y, cfg.norm_eps) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = linear(p["out_proj"], y, use_pallas=use_pallas)
+    return out, new_state
+
+
+def xbc_tail(p, h_in, cfg, di, n, use_pallas):
+    """Last (W-1) conv inputs after a full pass — seeds the decode conv state."""
+    zxbcdt = linear(p["in_proj"], h_in[:, -(cfg.ssm_conv_width - 1):], use_pallas=use_pallas)
+    return zxbcdt[..., di:di + di + 2 * n]
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, dtype) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    nh = di // cfg.ssm_head_dim
+    conv_dim = di + 2 * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, nh, cfg.ssm_state, cfg.ssm_head_dim), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# mLSTM (xLSTM)
+# --------------------------------------------------------------------------
+
+def mlstm_init(dec, key, path: str, cfg: ModelConfig, stack: Tuple[int, ...] = ()) -> Params:
+    d = cfg.d_model
+    nh = cfg.xlstm_heads
+    ks = jax.random.split(key, 7)
+    bc = lambda q: {k_: (jnp.broadcast_to(v_, stack + v_.shape) if stack else v_)
+                    for k_, v_ in q.items()}
+    return {
+        "norm": bc(rmsnorm_init(d, cfg.pdtype)),
+        "wq": dec.linear(ks[0], f"{path}/wq", d, d, stack=stack),
+        "wk": dec.linear(ks[1], f"{path}/wk", d, d, stack=stack),
+        "wv": dec.linear(ks[2], f"{path}/wv", d, d, stack=stack),
+        "wi": dec.linear(ks[3], f"{path}/wi_gate", d, nh, stack=stack),
+        "wf": dec.linear(ks[4], f"{path}/wf_gate", d, nh, stack=stack),
+        "wog": dec.linear(ks[5], f"{path}/wo_gate", d, d, stack=stack),
+        "wo": dec.linear(ks[6], f"{path}/wo", d, d, stack=stack),
+        "out_norm": bc(rmsnorm_init(d, cfg.pdtype)),
+    }
+
+
+def _mlstm_step(carry, t_in):
+    cm, nrm, m = carry  # (b,nh,pv,pk), (b,nh,pk), (b,nh)
+    qt, kt, vt, it, ft = t_in
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + m, it)
+    fe = jnp.exp(log_f + m - m_new)
+    ie = jnp.exp(it - m_new)
+    cm = fe[..., None, None] * cm + ie[..., None, None] * (vt[..., :, None] * kt[..., None, :])
+    nrm = fe[..., None] * nrm + ie[..., None] * kt
+    num = jnp.einsum("bhvk,bhk->bhv", cm, qt)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", nrm, qt)), jnp.exp(-m_new))
+    h = num / den[..., None]
+    return (cm, nrm, m_new), h
+
+
+def mlstm_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                mode: str = "full", state: Optional[Params] = None,
+                use_pallas: bool = False) -> Tuple[jax.Array, Params]:
+    b, s, d = x.shape
+    nh = cfg.xlstm_heads
+    hd = d // nh
+    h_in = rmsnorm(p["norm"], x, cfg.norm_eps)
+    q = linear(p["wq"], h_in, use_pallas=use_pallas).reshape(b, s, nh, hd)
+    k = linear(p["wk"], h_in, use_pallas=use_pallas).reshape(b, s, nh, hd) * (hd ** -0.5)
+    v = linear(p["wv"], h_in, use_pallas=use_pallas).reshape(b, s, nh, hd)
+    ig = linear(p["wi"], h_in, use_pallas=use_pallas).astype(jnp.float32)  # (b,s,nh)
+    fg = linear(p["wf"], h_in, use_pallas=use_pallas).astype(jnp.float32)
+
+    if state is not None:
+        carry0 = (state["c"].astype(jnp.float32), state["n"].astype(jnp.float32),
+                  state["m"].astype(jnp.float32))
+    else:
+        carry0 = (jnp.zeros((b, nh, hd, hd), jnp.float32),
+                  jnp.zeros((b, nh, hd), jnp.float32),
+                  jnp.full((b, nh), -1e30, jnp.float32))
+
+    seq = (jnp.moveaxis(q.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(k.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(v.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(ig, 1, 0), jnp.moveaxis(fg, 1, 0))
+    (cm, nrm, m), hs = jax.lax.scan(_mlstm_step, carry0, seq)
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+
+    og = jax.nn.sigmoid(linear(p["wog"], h_in, use_pallas=use_pallas).astype(jnp.float32))
+    h = rmsnorm(p["out_norm"], h, cfg.norm_eps) * og.astype(x.dtype)
+    out = linear(p["wo"], h, use_pallas=use_pallas)
+    new_state = {"c": cm.astype(x.dtype), "n": nrm.astype(x.dtype), "m": m}
+    return out, new_state
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int, dtype) -> Params:
+    d = cfg.d_model
+    nh = cfg.xlstm_heads
+    hd = d // nh
+    return {
+        "c": jnp.zeros((batch, nh, hd, hd), dtype),
+        "n": jnp.zeros((batch, nh, hd), dtype),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }

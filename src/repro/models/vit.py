@@ -1,0 +1,69 @@
+"""ViT for the paper's Table-4 experiment (12 transformer modules; the two
+FC layers inside each feed-forward block + the patch-embedding FC are
+SVD-decomposed, exactly the layers the paper decomposes)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decompose import Decomposer
+from repro.models.common import (Params, layernorm, layernorm_init, linear)
+from repro.models.lm import _bc, _scan_stack
+
+
+def vit_init(key, dec: Decomposer, *, num_layers=12, d=768, heads=12, d_ff=3072,
+             patch=16, img=224, num_classes=10, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 6)
+    n_patches = (img // patch) ** 2
+    stack = (num_layers,)
+    return {
+        "patch_embed": dec.linear(ks[0], "patch_embed", patch * patch * 3, d,
+                                  bias=True, dtype=dtype),
+        "pos_emb": jax.random.normal(ks[1], (1, n_patches + 1, d), jnp.float32).astype(dtype) * 0.02,
+        "cls": jnp.zeros((1, 1, d), dtype),
+        "blocks": {
+            "norm1": _bc(layernorm_init(d, dtype), stack),
+            "wq": dec.linear(ks[2], "blocks/attn/wq", d, d, bias=True, dtype=dtype, stack=stack),
+            "wk": dec.linear(ks[2], "blocks/attn/wk", d, d, bias=True, dtype=dtype, stack=stack),
+            "wv": dec.linear(ks[2], "blocks/attn/wv", d, d, bias=True, dtype=dtype, stack=stack),
+            "wo": dec.linear(ks[3], "blocks/attn/wo", d, d, bias=True, dtype=dtype, stack=stack),
+            "norm2": _bc(layernorm_init(d, dtype), stack),
+            # the paper: "2 fully connected layers inside the feed forward"
+            "wi": dec.linear(ks[4], "blocks/ffn/wi", d, d_ff, bias=True, dtype=dtype, stack=stack),
+            "down": dec.linear(ks[5], "blocks/ffn/down", d_ff, d, bias=True, dtype=dtype, stack=stack),
+        },
+        "final_norm": layernorm_init(d, dtype),
+        "head": dec.linear(ks[1], "head", d, num_classes, bias=True, dtype=dtype),
+    }
+
+
+def vit_apply(p: Params, images: jax.Array, *, heads=12, patch=16) -> jax.Array:
+    """images: (B, H, W, 3) -> logits."""
+    b, hh, ww, _ = images.shape
+    ph, pw = hh // patch, ww // patch
+    x = images.reshape(b, ph, patch, pw, patch, 3).transpose(0, 1, 3, 2, 4, 5)
+    x = x.reshape(b, ph * pw, patch * patch * 3)
+    h = linear(p["patch_embed"], x)
+    h = jnp.concatenate([jnp.broadcast_to(p["cls"], (b, 1, h.shape[-1])), h], axis=1)
+    h = h + p["pos_emb"].astype(h.dtype)
+
+    def body(lp, hh_, _):
+        d = hh_.shape[-1]
+        hd = d // heads
+        a_in = layernorm(lp["norm1"], hh_)
+        q = linear(lp["wq"], a_in).reshape(b, -1, heads, hd) * (hd ** -0.5)
+        k = linear(lp["wk"], a_in).reshape(b, -1, heads, hd)
+        v = linear(lp["wv"], a_in).reshape(b, -1, heads, hd)
+        att = jax.nn.softmax(jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                                        k.astype(jnp.float32)), axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v.astype(jnp.float32)).astype(hh_.dtype)
+        hh_ = hh_ + linear(lp["wo"], o.reshape(b, -1, d))
+        f_in = layernorm(lp["norm2"], hh_)
+        f = jax.nn.gelu(linear(lp["wi"], f_in).astype(jnp.float32)).astype(hh_.dtype)
+        return hh_ + linear(lp["down"], f), None, jnp.zeros((), jnp.float32)
+
+    blocks = {k: v for k, v in p["blocks"].items()}
+    h, _, _ = _scan_stack(blocks, h, body, None)
+    h = layernorm(p["final_norm"], h)
+    return linear(p["head"], h[:, 0])

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import (  # noqa: F401
+    OptState, adamw_init, init_optimizer, make_schedule, sgdm_init)

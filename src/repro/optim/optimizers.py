@@ -1,0 +1,117 @@
+"""Optimizers (SGD+momentum — the paper's choice — and AdamW) with
+freeze-mask-aware updates and LR schedules.  No optax offline; these are
+small, well-tested pure-JAX implementations.
+
+Freeze semantics (paper §2.2): frozen leaves receive *zero gradient* via
+stop_gradient in the loss, so their update is exactly 0 and their optimizer
+state is left untouched — implemented by masking the state update with the
+same static mask, letting XLA DCE the whole frozen branch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any  # momentum / first moment (fp32)
+    nu: Any  # second moment (AdamW) or () for SGD
+
+
+def make_schedule(cfg: OptimConfig) -> Callable[[jax.Array], jax.Array]:
+    base, warm, total = cfg.lr, cfg.warmup_steps, cfg.total_steps
+
+    def schedule(step):
+        step = step.astype(jnp.float32) + 1.0  # 1-indexed: first step lr > 0
+        warmup = base * step / jnp.maximum(warm, 1)
+        if cfg.schedule == "cosine":
+            t = jnp.clip((step - warm) / jnp.maximum(total - warm, 1), 0.0, 1.0)
+            decay = base * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        elif cfg.schedule == "linear":
+            t = jnp.clip((step - warm) / jnp.maximum(total - warm, 1), 0.0, 1.0)
+            decay = base * (1.0 - t)
+        else:  # constant
+            decay = jnp.asarray(base)
+        return jnp.where(step < warm, warmup, decay)
+
+    return schedule
+
+
+def _zeros_like(params, dtype):
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, dtype), params)
+
+
+def sgdm_init(params, state_dtype=jnp.float32) -> OptState:
+    return OptState(jnp.zeros((), jnp.int32), _zeros_like(params, state_dtype), ())
+
+
+def adamw_init(params, state_dtype=jnp.float32) -> OptState:
+    return OptState(jnp.zeros((), jnp.int32), _zeros_like(params, state_dtype),
+                    _zeros_like(params, state_dtype))
+
+
+def init_optimizer(cfg: OptimConfig, params) -> OptState:
+    dt = jnp.dtype(cfg.state_dtype)
+    return sgdm_init(params, dt) if cfg.name == "sgdm" else adamw_init(params, dt)
+
+
+def apply_updates(cfg: OptimConfig, params, grads, state: OptState,
+                  mask: Optional[Any] = None):
+    """One optimizer step.  ``mask`` leaves (False = frozen) skip both the
+    param update and the state update (the paper's requires_grad=False)."""
+    lr = make_schedule(cfg)(state.step)
+    step = state.step + 1
+
+    def leafwise(fn, *trees):
+        if mask is None:
+            return jax.tree_util.tree_map(fn, *trees)
+        return jax.tree_util.tree_map(
+            lambda m, *ls: fn(*ls) if m else ls[0], mask, *trees)
+
+    sdt = jnp.dtype(cfg.state_dtype)
+    if cfg.name == "sgdm":
+        new_mu = leafwise(
+            lambda mu, g: (cfg.momentum * mu.astype(jnp.float32)
+                           + g.astype(jnp.float32)).astype(sdt),
+            state.mu, grads)
+        new_params = leafwise(
+            lambda p, mu: (p.astype(jnp.float32) - lr * (mu.astype(jnp.float32)
+                           + cfg.weight_decay * p.astype(jnp.float32))).astype(p.dtype),
+            params, new_mu)
+        return new_params, OptState(step, new_mu, ())
+
+    # AdamW
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+    new_mu = leafwise(
+        lambda mu, g: (b1 * mu.astype(jnp.float32)
+                       + (1 - b1) * g.astype(jnp.float32)).astype(sdt),
+        state.mu, grads)
+    new_nu = leafwise(
+        lambda nu, g: (b2 * nu.astype(jnp.float32)
+                       + (1 - b2) * jnp.square(g.astype(jnp.float32))).astype(sdt),
+        state.nu, grads)
+
+    def upd(p, mu, nu):
+        mhat = mu.astype(jnp.float32) / c1
+        vhat = nu.astype(jnp.float32) / c2
+        return (p.astype(jnp.float32)
+                - lr * (mhat / (jnp.sqrt(vhat) + eps)
+                        + cfg.weight_decay * p.astype(jnp.float32))).astype(p.dtype)
+
+    if mask is None:
+        new_params = jax.tree_util.tree_map(upd, params, new_mu, new_nu)
+    else:
+        new_params = jax.tree_util.tree_map(
+            lambda m, p, mu, nu: upd(p, mu, nu) if m else p,
+            mask, params, new_mu, new_nu)
+    return new_params, OptState(step, new_mu, new_nu)

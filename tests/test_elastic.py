@@ -1,0 +1,47 @@
+"""Elastic re-scaling: a checkpoint saved in THIS (1-device) process restores
+onto an 8-device (2,4) mesh in a subprocess with re-sharding — node-failure
+recovery and cluster resizing share this code path."""
+
+import json
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def test_checkpoint_restores_onto_bigger_mesh(tmp_path):
+    from repro.checkpoint import save_checkpoint
+
+    params = {"layer": {"kernel": np.arange(16 * 8, dtype=np.float32).reshape(16, 8)},
+              "scale": np.ones((8,), np.float32)}
+    save_checkpoint(tmp_path, 7, params, extra={"note": "elastic"})
+
+    prog = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, {str(Path("src").resolve())!r})
+import jax, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+from repro.checkpoint import load_checkpoint
+from repro.checkpoint.store import latest_checkpoint
+
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+shardings = {{
+    "layer": {{"kernel": NamedSharding(mesh, P("data", "model"))}},
+    "scale": NamedSharding(mesh, P(None)),
+}}
+state, step, extra = load_checkpoint(latest_checkpoint({str(tmp_path)!r}), shardings)
+k = state["layer"]["kernel"]
+assert step == 7 and extra["note"] == "elastic"
+assert len(k.sharding.device_set) == 8, k.sharding
+np.testing.assert_array_equal(
+    np.asarray(k), np.arange(16 * 8, dtype=np.float32).reshape(16, 8))
+print("ELASTIC_OK")
+"""
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, timeout=300)
+    assert "ELASTIC_OK" in out.stdout, out.stderr[-2000:]
