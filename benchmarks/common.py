@@ -43,3 +43,19 @@ def method_policies(base: DecompositionPolicy, alpha: float = 2.0):
 
 def csv_row(name: str, us: float, derived: str = "") -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+def record(name: str, rows, out_dir: str = "benchmarks/results") -> str:
+    """Record benchmark rows as ``BENCH_<name>.json`` (see BENCHMARKS.md).
+
+    Every script's ``main()`` returns its row dicts; ``run.py`` funnels them
+    through here so perf numbers are diffable across PRs.  Returns the path.
+    """
+    import json
+    import pathlib
+
+    p = pathlib.Path(out_dir)
+    p.mkdir(parents=True, exist_ok=True)
+    path = p / f"BENCH_{name}.json"
+    path.write_text(json.dumps(rows, indent=1, default=str))
+    return str(path)

@@ -1,9 +1,13 @@
 """Fused low-rank matmul kernel: correctness-at-scale sweep + analytic
-HBM-traffic saving + CPU wall-clock of the fused-jnp vs two-dot paths.
+HBM-traffic saving + CPU wall-clock of the fused-jnp vs two-dot paths,
+for the forward AND the backward per sequential-freezing phase.
 
-On TPU the fused Pallas kernel removes the rank-r intermediate's HBM
-round-trip; here we report the analytic saving per shape (the dry-run is the
-perf artifact) and validate numerics in interpret mode."""
+On TPU the fused Pallas kernels remove the rank-r intermediates' HBM
+round-trips (t = x@U in the forward; t and dt = dy@Vᵀ in the backward —
+DESIGN.md §3); here we report the analytic saving per shape (the dry-run is
+the perf artifact), validate numerics in interpret mode, and count the
+backward kernels actually emitted per freeze phase (the frozen factor's
+kernel must be absent from the jaxpr, not DCE'd)."""
 
 from __future__ import annotations
 
@@ -12,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import time_fn
+from repro.core import freezing
 from repro.core.rank_opt import TPU_V5E, analytic_layer_time
 from repro.kernels import ops, ref
 
@@ -50,6 +55,86 @@ def run(iters=3):
     return rows
 
 
+PHASES = {"none": None, "phase0(u-frozen)": 0, "phase1(v-frozen)": 1}
+
+
+def run_bwd(iters=3):
+    """Backward-pass microbench per freeze phase.
+
+    Per (m, c, r, s) x phase: analytic HBM bytes the fused backward keeps out
+    of HBM (dt always; t only while dV is trained), the dt/t recompute factor
+    the kernels pay for it (MXU FLOPs traded for HBM bytes), and the number
+    of backward kernels emitted.  Plus, on a scaled-down shape: interpret-mode
+    parity of the kernel backward vs ``jax.grad`` of the reference, and CPU
+    wall-clock of the jnp backward per phase (stop_gradient => XLA drops the
+    frozen factor's backward — the paper's Algorithm-2 saving, measurable
+    even on CPU).
+    """
+    bk, bn = 512, 256  # default block_k/block_n; block_m doesn't enter
+    rows = []
+    for m, c, r, s in SHAPES:
+        for phase_name, fg in PHASES.items():
+            # dt (m, r) write+read is saved whenever dx/dU run; t (m, r)
+            # write+read only while dV is trained (group 1 unfrozen).
+            saved = 2 * m * r * 2  # dt, bf16
+            if fg != 1:
+                saved += 2 * m * r * 2  # t
+            # dt is rebuilt per C-block by the dx kernel AND (unless u is
+            # frozen) by the dU kernel; t per S-block by the dV kernel.
+            recompute = {"dt_x": (c // bk) * (2 if fg != 0 else 1),
+                         "t_x": s // bn if fg != 1 else 0}
+            rows.append({
+                "shape": f"{m}x{c}x{r}x{s}",
+                "phase": phase_name,
+                "kernels_emitted": 3 - (1 if fg is not None else 0),
+                "hbm_saved_mb": saved / 1e6,
+                "recompute_factors": recompute,
+            })
+
+    # measured: scaled-down shape, jnp path, stop_gradient per phase
+    sm, sc, sr, ss = 512, 1024, 128, 512
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(k1, (sm, sc), jnp.float32)
+    u = jax.random.normal(k2, (sc, sr), jnp.float32) * 0.05
+    v = jax.random.normal(k3, (sr, ss), jnp.float32) * 0.1
+    dy = jax.random.normal(k4, (sm, ss), jnp.float32)
+
+    measured = []
+    for phase_name, fg in PHASES.items():
+        def loss(x, u, v, fg=fg):
+            if fg == 0:
+                u = jax.lax.stop_gradient(u)
+            elif fg == 1:
+                v = jax.lax.stop_gradient(v)
+            return jnp.vdot(ref.lowrank_matmul_ref(x, u, v), dy)
+
+        g = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
+        t_us = time_fn(g, x, u, v, iters=iters) * 1e6
+
+        # interpret-mode parity of the fused backward on a small slice
+        def loss_k(x, u, v, fg=fg):
+            y = ops.lowrank_apply(x[:128, :256], u[:256, :64], v[:64, :128],
+                                  use_kernel=True, interpret=True,
+                                  block_m=128, block_k=256, block_n=128,
+                                  freeze_group=fg)
+            return jnp.vdot(y, dy[:128, :128])
+
+        def loss_r(x, u, v, fg=fg):
+            if fg == 0:
+                u = jax.lax.stop_gradient(u)
+            elif fg == 1:
+                v = jax.lax.stop_gradient(v)
+            y = ref.lowrank_matmul_ref(x[:128, :256], u[:256, :64], v[:64, :128])
+            return jnp.vdot(y, dy[:128, :128])
+
+        gk = jax.grad(loss_k, argnums=(0, 1, 2))(x, u, v)
+        gr = jax.grad(loss_r, argnums=(0, 1, 2))(x, u, v)
+        err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(gk, gr))
+        measured.append({"shape": f"{sm}x{sc}x{sr}x{ss}", "phase": phase_name,
+                         "bwd_jnp_us": t_us, "interpret_max_err": err})
+    return rows, measured
+
+
 def run_flash(iters=2):
     """flash-attention kernel: interpret-mode correctness + analytic HBM
     saving vs the blockwise-jnp path (which round-trips each fp32 score
@@ -76,15 +161,26 @@ def run_flash(iters=2):
 
 def main(**kw):
     rows = run(**kw)
-    print("# kernel microbench: shape, unfused_us(TPU-analytic), fused_us, "
+    print("# kernel microbench fwd: shape, unfused_us(TPU-analytic), fused_us, "
           "HBM_saved_MB, interpret_err")
     for r in rows:
         print(f"{r['shape']},{r['analytic_unfused_us']:.1f},"
               f"{r['analytic_fused_us']:.1f},{r['hbm_saved_mb']:.1f},"
               f"{r['interpret_max_err']:.2e}")
+    bwd_rows, bwd_measured = run_bwd(**kw)
+    print("# kernel microbench bwd (analytic): shape, phase, kernels_emitted, "
+          "HBM_saved_MB, recompute")
+    for r in bwd_rows:
+        print(f"{r['shape']},{r['phase']},{r['kernels_emitted']},"
+              f"{r['hbm_saved_mb']:.1f},{r['recompute_factors']}")
+    print("# kernel microbench bwd (measured): shape, phase, bwd_jnp_us, "
+          "interpret_err")
+    for r in bwd_measured:
+        print(f"{r['shape']},{r['phase']},{r['bwd_jnp_us']:.1f},"
+              f"{r['interpret_max_err']:.2e}")
     for r in run_flash():
         print(f"{r['shape']},,,{r['hbm_saved_mb']:.1f},{r['interpret_max_err']:.2e}")
-    return rows
+    return {"fwd": rows, "bwd_analytic": bwd_rows, "bwd_measured": bwd_measured}
 
 
 if __name__ == "__main__":

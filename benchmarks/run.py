@@ -1,8 +1,12 @@
 """Benchmark harness — one function per paper table/figure + kernel + LM
 throughput.  Prints ``name,us_per_call,derived`` CSV lines (plus per-table
-sections).  ``--full`` also runs ResNet-101/152 (slow on CPU).
+sections).  ``--full`` also runs ResNet-101/152 (slow on CPU); ``--smoke``
+runs only the fast, deterministic sections (kernel microbench incl. the
+per-freeze-phase backward, and the analytic rank-sweep) — the CI-friendly
+path documented in README.md.  ``--record`` writes each section's rows to
+``benchmarks/results/BENCH_<section>.json`` (see benchmarks/BENCHMARKS.md).
 
-  PYTHONPATH=src python -m benchmarks.run [--full]
+  PYTHONPATH=src python -m benchmarks.run [--full | --smoke] [--record]
 """
 
 from __future__ import annotations
@@ -21,15 +25,23 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="also run ResNet-101/152 ladders (slow on CPU)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast deterministic sections only (kernels + "
+                         "analytic rank sweep)")
+    ap.add_argument("--record", action="store_true",
+                    help="write rows to benchmarks/results/BENCH_*.json")
     args, _ = ap.parse_known_args()
 
     failures = []
 
-    def guard(title, fn):
+    def guard(title, fn, record_as=None):
         _section(title)
         t0 = time.perf_counter()
         try:
-            fn()
+            rows = fn()
+            if args.record and record_as and rows is not None:
+                from benchmarks.common import record
+                print(f"[recorded {record(record_as, rows)}]")
         except Exception:  # keep the harness going; report at the end
             traceback.print_exc()
             failures.append(title)
@@ -40,6 +52,19 @@ def main() -> None:
                             table1_resnet_throughput,
                             table2_decomposition_time, table3_accuracy,
                             table4_vit)
+
+    if args.smoke:
+        guard("Kernel microbench (fused low-rank fwd+bwd, per freeze phase)",
+              kernel_microbench.main, record_as="kernel_microbench")
+        guard("Fig 2: rank sweep (analytic only)",
+              lambda: fig2_rank_sweep.main(measured=False),
+              record_as="fig2_rank_sweep")
+        _section("summary")
+        if failures:
+            print(f"FAILED sections: {failures}")
+            sys.exit(1)
+        print("smoke benchmark sections completed")
+        return
 
     guard("Table 1: ResNet-50 throughput ladder",
           lambda: table1_resnet_throughput.main("resnet50"))
@@ -54,10 +79,12 @@ def main() -> None:
               else ("resnet50",)))
     guard("Table 3: accuracy ladder (synthetic proxy)", table3_accuracy.main)
     guard("Table 4: ViT ladder", table4_vit.main)
-    guard("Fig 2: rank sweep (cliff curve)", fig2_rank_sweep.main)
+    guard("Fig 2: rank sweep (cliff curve)", fig2_rank_sweep.main,
+          record_as="fig2_rank_sweep")
     guard("Fig 3: sequential vs regular freezing",
           fig3_freezing_convergence.main)
-    guard("Kernel microbench (fused low-rank matmul)", kernel_microbench.main)
+    guard("Kernel microbench (fused low-rank fwd+bwd, per freeze phase)",
+          kernel_microbench.main, record_as="kernel_microbench")
     guard("LM train/decode throughput (smoke archs)", lm_throughput.main)
 
     _section("summary")

@@ -1,0 +1,97 @@
+"""Version-compatibility shims over the installed jax.
+
+The repo targets the current jax APIs; older installs (>= 0.4.37) lack a few
+names we use.  Everything version-sensitive funnels through here so the rest
+of the codebase can be written against one surface:
+
+* ``make_mesh(shape, names)`` — ``jax.sharding.AxisType`` /
+  ``jax.make_mesh(axis_types=...)`` only exist on newer jax; older versions
+  get the plain explicit-sharding-free mesh (same semantics for every mesh we
+  build: all axes Auto).
+* ``shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)`` —
+  ``jax.shard_map`` + ``check_vma`` on new jax, the
+  ``jax.experimental.shard_map`` + ``check_rep`` spelling on old.
+* ``pallas_compiler_params(dimension_semantics=...)`` — the Pallas TPU params
+  class was renamed ``TPUCompilerParams`` -> ``CompilerParams``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+from typing import Any, Sequence
+
+import jax
+
+__all__ = ["make_mesh", "shard_map", "pallas_compiler_params",
+           "optimization_barrier", "AxisType"]
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType  # type: ignore
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+_MAKE_MESH_HAS_AXIS_TYPES = (
+    AxisType is not None
+    and "axis_types" in inspect.signature(jax.make_mesh).parameters
+)
+
+
+def make_mesh(shape: Sequence[int], names: Sequence[str]):
+    """``jax.make_mesh`` with all axes Auto, on any supported jax."""
+    if _MAKE_MESH_HAS_AXIS_TYPES:
+        return jax.make_mesh(shape, names,
+                             axis_types=(AxisType.Auto,) * len(names))
+    return jax.make_mesh(shape, names)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+              axis_names=None):
+    """``jax.shard_map`` (new) / ``jax.experimental.shard_map`` (old).
+
+    ``axis_names`` is the new-jax partial-manual spelling (the set of mesh
+    axes that are manual inside ``f``); old jax expresses the same thing as
+    the complement ``auto`` set.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {"check_vma": check_vma}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm  # type: ignore
+    kw = {"check_rep": check_vma}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+@functools.lru_cache(maxsize=None)
+def _barrier_differentiable() -> bool:
+    try:
+        jax.grad(lambda x: jax.lax.optimization_barrier(x))(0.0)
+        return True
+    except NotImplementedError:
+        return False
+
+
+def optimization_barrier(x):
+    """``jax.lax.optimization_barrier`` where jax can differentiate it.
+
+    The barrier is a memory-layout hint (it pins the remat stash dtype, see
+    models/lm.py); on jax versions without its differentiation rule we drop
+    the hint rather than lose the backward pass.
+    """
+    if _barrier_differentiable():
+        return jax.lax.optimization_barrier(x)
+    return x
+
+
+def pallas_compiler_params(
+    *, dimension_semantics: Sequence[str] | None = None, **kw: Any
+):
+    """Pallas TPU ``CompilerParams`` across the rename."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(dimension_semantics=dimension_semantics, **kw)

@@ -197,6 +197,13 @@ class LRDConfig:
     freeze_mode: str = "none"  # none | regular | sequential
     use_pallas_kernel: bool = False  # fused low-rank matmul (TPU only)
     min_dim: int = 128  # skip matrices smaller than this on either side
+    # Pallas launch knobs (block sizes must divide the layer dims or the
+    # call falls back to the jnp path; interpret runs the kernels on CPU
+    # for validation — see kernels/ops.KernelPolicy):
+    pallas_block_m: int = 256
+    pallas_block_k: int = 512
+    pallas_block_n: int = 256
+    pallas_interpret: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

@@ -25,7 +25,8 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
-__all__ = ["FreezeMode", "factor_group", "freeze_mask", "apply_freeze", "phase_for_epoch"]
+__all__ = ["FreezeMode", "factor_group", "freeze_mask", "apply_freeze",
+           "phase_for_epoch", "frozen_group_for_phase"]
 
 # Leaf names of decomposed factors -> group id (see module docstring).
 _SVD_GROUPS = {"u": 0, "v": 1}
@@ -54,6 +55,18 @@ def phase_for_epoch(epoch: int, mode: FreezeMode | str) -> int:
     if mode == FreezeMode.REGULAR:
         return 0
     return int(epoch) % 2
+
+
+def frozen_group_for_phase(phase: int) -> int | None:
+    """Factor group frozen at ``phase`` (None when nothing is frozen).
+
+    This is the static value the launch layer threads into the fused-kernel
+    VJPs (``kernels.ops.KernelPolicy.freeze_group``): it guarantees the
+    frozen factor's backward kernel is never *emitted*, complementing the
+    ``stop_gradient`` masking below which only guarantees the jnp paths'
+    backward is never *built*.
+    """
+    return phase if phase in (0, 1) else None
 
 
 def freeze_mask(params: Any, phase: int) -> Any:

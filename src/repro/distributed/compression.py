@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def _quantize_pmean_pod(g: jax.Array, n_pods: int) -> jax.Array:
     if g.dtype == jnp.int32 or g.ndim == 0:
@@ -64,7 +66,7 @@ def value_and_grad_compressed(
 
     batch_specs = jax.tree_util.tree_map(
         lambda x: P(*(("pod",) + (None,) * (x.ndim - 1))), batch)
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(), batch_specs),
         out_specs=(P(), P()),

@@ -6,7 +6,7 @@ axis to mesh axes, skipping candidates whose mesh axes are missing, already
 used by an earlier dim, or do not divide the dimension.  This is what lets a
 single model definition run on (16,16), (2,16,16) and a 1-device CPU mesh —
 GQA with 8 KV heads on a 16-way model axis simply falls through to the next
-candidate instead of failing to partition (DESIGN.md §3).
+candidate instead of failing to partition (DESIGN.md §5).
 
 Two rule tables each for params and activations:
 

@@ -1,4 +1,5 @@
 """Pallas TPU kernels for the paper's compute hot-spot (decomposed linears)."""
 
-from repro.kernels.ops import lowrank_apply  # noqa: F401
+from repro.kernels.ops import (KernelPolicy, as_policy,  # noqa: F401
+                               lowrank_apply, lowrank_ffn_apply)
 from repro.kernels.flash_attention import flash_attention  # noqa: F401

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pallas_compiler_params
+
 __all__ = ["lowrank_gated_ffn"]
 
 
@@ -76,7 +78,7 @@ def lowrank_gated_ffn(x, gu, gv, uu, uv, *, block_m: int = 256,
             pltpu.VMEM((block_m, rg), jnp.float32),
             pltpu.VMEM((block_m, ru), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -7,44 +7,106 @@ platform can run it (TPU, or interpret mode for validation) and (b) the
 shapes are block-divisible; otherwise it runs the mathematically identical
 jnp path (which XLA still fuses reasonably on TPU, and which is the only
 path exercised inside the 512-device SPMD dry-run — see DESIGN.md §3).
+``lowrank_ffn_apply`` is the same dispatcher for the fused low-rank SwiGLU
+first half.
+
+Both fused forwards carry a freezing-aware ``jax.custom_vjp`` whose backward
+is the Pallas kernel set in :mod:`repro.kernels.lowrank_bwd` — the rank-r
+intermediates stay in VMEM scratch, and a *static* ``freeze_group`` (the
+sequential-freezing phase, Algorithm 2) elides the frozen factor's gradient
+kernel at trace time, so it is never emitted rather than dead-code-eliminated
+after the fact (DESIGN.md §3).
+
+:class:`KernelPolicy` is how the launch layer threads those static choices
+through the model zoo: every model function already forwards its
+``use_pallas`` argument verbatim down to :func:`repro.models.common.linear`,
+so the policy rides that argument and no intermediate signature changes.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.lowrank_bwd import (lowrank_matmul_du, lowrank_matmul_dv,
+                                       lowrank_matmul_dx)
+from repro.kernels.lowrank_ffn import lowrank_gated_ffn
 from repro.kernels.lowrank_matmul import lowrank_matmul
 
-__all__ = ["lowrank_apply", "kernel_available", "lowrank_matmul_vjp"]
+__all__ = [
+    "KernelPolicy", "as_policy", "kernel_available",
+    "lowrank_apply", "lowrank_matmul_vjp",
+    "lowrank_ffn_apply", "lowrank_ffn_vjp",
+]
 
 
-# Pallas kernels are not auto-differentiable: the fused forward pairs with a
-# jnp backward (recompute t = x@u; three matmuls — the standard fused-fwd /
-# composed-bwd pattern).
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
-def lowrank_matmul_vjp(x, u, v, block_m, block_k, block_n, interpret):
+@dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """Static per-step kernel dispatch choices.
+
+    Hashable and compared by value: it is closed over by the jit'd train
+    step, so one compiled executable exists per distinct policy (in
+    practice: one per sequential-freezing phase, exactly like the ``phase``
+    static argument it derives from).
+
+    ``freeze_group`` names the factor group frozen this phase (0 = u,
+    1 = v, per ``core.freezing``); the matching backward kernel is not
+    emitted.  ``interpret`` runs the Pallas kernels in interpret mode
+    (CPU validation).  The block sizes feed every kernel launch.
+    """
+
+    use_pallas: bool = False
+    freeze_group: Optional[int] = None
+    interpret: bool = False
+    block_m: int = 256
+    block_k: int = 512
+    block_n: int = 256
+
+    def __bool__(self) -> bool:  # `if use_pallas:` keeps working
+        return self.use_pallas
+
+
+def as_policy(use_pallas: Union[bool, KernelPolicy, None]) -> KernelPolicy:
+    """Normalize the ``use_pallas`` argument (legacy bool or policy)."""
+    if isinstance(use_pallas, KernelPolicy):
+        return use_pallas
+    return KernelPolicy(use_pallas=bool(use_pallas))
+
+
+# --------------------------------------------------------------------------
+# lowrank matmul: fused forward + freezing-aware fused backward
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def lowrank_matmul_vjp(x, u, v, block_m, block_k, block_n, interpret,
+                       freeze_group):
     return lowrank_matmul(x, u, v, block_m=block_m, block_k=block_k,
                           block_n=block_n, interpret=interpret)
 
 
-def _lr_fwd(x, u, v, block_m, block_k, block_n, interpret):
+def _lr_fwd(x, u, v, block_m, block_k, block_n, interpret, freeze_group):
     y = lowrank_matmul(x, u, v, block_m=block_m, block_k=block_k,
                        block_n=block_n, interpret=interpret)
     return y, (x, u, v)
 
 
-def _lr_bwd(block_m, block_k, block_n, interpret, res, dy):
+def _lr_bwd(block_m, block_k, block_n, interpret, freeze_group, res, dy):
     x, u, v = res
-    f32 = jnp.float32
-    t = jnp.dot(x, u, preferred_element_type=f32).astype(x.dtype)  # recompute
-    dt = jnp.dot(dy, v.T, preferred_element_type=f32).astype(x.dtype)
-    dx = jnp.dot(dt, u.T, preferred_element_type=f32).astype(x.dtype)
-    du = jnp.dot(x.T, dt, preferred_element_type=f32).astype(u.dtype)
-    dv = jnp.dot(t.T, dy, preferred_element_type=f32).astype(v.dtype)
+    kw = dict(block_m=block_m, block_k=block_k, block_n=block_n,
+              interpret=interpret)
+    dx = lowrank_matmul_dx(dy, u, v, **kw)
+    # freeze_group is STATIC: the frozen factor's kernel is absent from the
+    # jaxpr, not emitted-then-DCE'd.  The zeros cotangent is dropped by the
+    # upstream stop_gradient transpose.
+    du = (jnp.zeros(u.shape, u.dtype) if freeze_group == 0
+          else lowrank_matmul_du(x, dy, v, out_dtype=u.dtype, **kw))
+    dv = (jnp.zeros(v.shape, v.dtype) if freeze_group == 1
+          else lowrank_matmul_dv(x, u, dy, out_dtype=v.dtype, **kw))
     return dx, du, dv
 
 
@@ -70,6 +132,7 @@ def lowrank_apply(
     block_m: int = 256,
     block_k: int = 512,
     block_n: int = 256,
+    freeze_group: Optional[int] = None,
 ) -> jax.Array:
     """y = (x @ u) @ v for arbitrary-batch x (..., C)."""
     c, r = u.shape
@@ -81,6 +144,101 @@ def lowrank_apply(
     use = use_kernel if use_kernel is not None else (kernel_available() or interpret)
     if use and _divisible(m, c, s, block_m, block_k, block_n):
         y = lowrank_matmul_vjp(x.reshape(m, c), u, v,
-                               block_m, block_k, block_n, interpret)
+                               block_m, block_k, block_n, interpret,
+                               freeze_group)
         return y.reshape(*lead, s)
+    # One freeze contract on both paths: stop_gradient the frozen factor so
+    # a shape-dependent fallback can't silently train it.
+    if freeze_group == 0:
+        u = jax.lax.stop_gradient(u)
+    elif freeze_group == 1:
+        v = jax.lax.stop_gradient(v)
     return ref.lowrank_matmul_ref(x.reshape(m, c), u, v).reshape(*lead, s)
+
+
+# --------------------------------------------------------------------------
+# lowrank gated FFN: fused forward + freezing-aware backward
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def lowrank_ffn_vjp(x, gu, gv, uu, uv, block_m, block_k, block_n, interpret,
+                    freeze_group):
+    return lowrank_gated_ffn(x, gu, gv, uu, uv, block_m=block_m,
+                             block_k=block_k, block_n=block_n,
+                             interpret=interpret)
+
+
+def _ffn_fwd(x, gu, gv, uu, uv, block_m, block_k, block_n, interpret,
+             freeze_group):
+    y = lowrank_gated_ffn(x, gu, gv, uu, uv, block_m=block_m,
+                          block_k=block_k, block_n=block_n,
+                          interpret=interpret)
+    return y, (x, gu, gv, uu, uv)
+
+
+def _ffn_bwd(block_m, block_k, block_n, interpret, freeze_group, res, dy):
+    x, gu, gv, uu, uv = res
+    kw = dict(block_m=block_m, block_k=block_k, block_n=block_n,
+              interpret=interpret)
+    # Recompute the branch pre-activations with the fused forward kernel —
+    # cheaper in HBM bytes than stashing two (M, F) tensors across the step.
+    g = lowrank_matmul(x, gu, gv, **kw)
+    up = lowrank_matmul(x, uu, uv, **kw)
+    gf, upf = g.astype(jnp.float32), up.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32)
+    sg = jax.nn.sigmoid(gf)
+    silu_g = gf * sg
+    # d silu(g)/dg = sigmoid(g) * (1 + g * (1 - sigmoid(g)))
+    dg = (dyf * upf * (sg * (1.0 + gf * (1.0 - sg)))).astype(x.dtype)
+    dup = (dyf * silu_g).astype(x.dtype)
+
+    dx = (lowrank_matmul_dx(dg, gu, gv, **kw)
+          + lowrank_matmul_dx(dup, uu, uv, **kw))
+    if freeze_group == 0:
+        dgu = jnp.zeros(gu.shape, gu.dtype)
+        duu = jnp.zeros(uu.shape, uu.dtype)
+    else:
+        dgu = lowrank_matmul_du(x, dg, gv, out_dtype=gu.dtype, **kw)
+        duu = lowrank_matmul_du(x, dup, uv, out_dtype=uu.dtype, **kw)
+    if freeze_group == 1:
+        dgv = jnp.zeros(gv.shape, gv.dtype)
+        duv = jnp.zeros(uv.shape, uv.dtype)
+    else:
+        dgv = lowrank_matmul_dv(x, gu, dg, out_dtype=gv.dtype, **kw)
+        duv = lowrank_matmul_dv(x, uu, dup, out_dtype=uv.dtype, **kw)
+    return dx, dgu, dgv, duu, duv
+
+
+lowrank_ffn_vjp.defvjp(_ffn_fwd, _ffn_bwd)
+
+
+def lowrank_ffn_apply(
+    x: jax.Array,
+    gu: jax.Array, gv: jax.Array,
+    uu: jax.Array, uv: jax.Array,
+    *,
+    use_kernel: bool | None = None,
+    interpret: bool = False,
+    block_m: int = 256,
+    block_k: int = 512,
+    block_n: int = 256,
+    freeze_group: Optional[int] = None,
+) -> jax.Array:
+    """silu((x gu) gv) * ((x uu) uv) for arbitrary-batch x (..., C)."""
+    c = gu.shape[0]
+    f = gv.shape[1]
+    lead = x.shape[:-1]
+    m = 1
+    for d in lead:
+        m *= d
+    use = use_kernel if use_kernel is not None else (kernel_available() or interpret)
+    if use and _divisible(m, c, f, block_m, block_k, block_n):
+        y = lowrank_ffn_vjp(x.reshape(m, c), gu, gv, uu, uv,
+                            block_m, block_k, block_n, interpret, freeze_group)
+        return y.reshape(*lead, f)
+    if freeze_group == 0:
+        gu, uu = jax.lax.stop_gradient(gu), jax.lax.stop_gradient(uu)
+    elif freeze_group == 1:
+        gv, uv = jax.lax.stop_gradient(gv), jax.lax.stop_gradient(uv)
+    return ref.lowrank_gated_ffn_ref(x.reshape(m, c), gu, gv, uu, uv
+                                     ).reshape(*lead, f)

@@ -1,11 +1,17 @@
 """Production meshes.  Functions, not module constants — importing this
 module never touches jax device state (required for the dry-run's
-XLA_FLAGS ordering; see dryrun.py)."""
+XLA_FLAGS ordering; see dryrun.py).
+
+Mesh construction goes through :func:`repro.compat.make_mesh` so the same
+code runs on jax versions with and without ``jax.sharding.AxisType``."""
 
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import make_mesh as make_mesh_compat
+
+__all__ = ["make_production_mesh", "make_host_mesh", "make_mesh_compat"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,7 +20,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     growing it is how the design scales to N pods (DESIGN.md §5)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -22,5 +28,4 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n)
     model = min(model, n // data)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh_compat((data, model), ("data", "model"))

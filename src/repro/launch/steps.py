@@ -3,9 +3,12 @@ plus abstract ``input_specs`` (ShapeDtypeStruct stand-ins with shardings —
 the dry-run lowers against these, no allocation ever happens).
 
 The sequential-freezing phase is a STATIC argument: the returned train_step
-is ``step_fn(phase)(state, batch)``; each phase compiles once and XLA
-dead-code-eliminates the frozen factors' backward + optimizer update
-(DESIGN.md §2).
+is ``step_fn(phase)(state, batch)``; each phase compiles once.  The phase
+reaches the model twice: as a ``stop_gradient`` mask on the frozen factors
+(jnp paths — the backward is never built, DESIGN.md §2) and as the
+``freeze_group`` of the :class:`repro.kernels.ops.KernelPolicy` threaded
+through every layer's ``use_pallas`` argument (fused Pallas paths — the
+frozen factor's backward kernel is never emitted, DESIGN.md §3).
 """
 
 from __future__ import annotations
@@ -25,6 +28,7 @@ from repro.core.policy import LM_DEFAULT, NO_LRD
 from repro.distributed import (ACT_RULES, ACT_RULES_SP, PARAM_RULES,
                                PARAM_RULES_NO_FSDP, axis_rules, param_specs, shard)
 from repro.distributed.compression import value_and_grad_compressed
+from repro.kernels.ops import KernelPolicy
 from repro.models import encdec as encdec_mod, lm
 from repro.models.common import cross_entropy
 from repro.optim import init_optimizer
@@ -57,10 +61,27 @@ def init_params(run: RunConfig, key=None):
 # forward dispatch (family-aware)
 # --------------------------------------------------------------------------
 
+def kernel_policy(run: RunConfig, phase: int = -1) -> KernelPolicy:
+    """The static kernel-dispatch policy for one compiled step.
+
+    ``phase`` is the sequential-freezing phase; group ``phase`` is frozen
+    (u at phase 0, v at phase 1 — core/freezing.py), so the fused VJP skips
+    that factor's backward kernel entirely.
+    """
+    return KernelPolicy(
+        use_pallas=run.lrd.use_pallas_kernel,
+        freeze_group=freezing.frozen_group_for_phase(phase),
+        interpret=run.lrd.pallas_interpret,
+        block_m=run.lrd.pallas_block_m,
+        block_k=run.lrd.pallas_block_k,
+        block_n=run.lrd.pallas_block_n,
+    )
+
+
 def _forward_full(params, batch, run: RunConfig, *, return_hidden=False,
-                  mode: str = "full"):
+                  mode: str = "full", phase: int = -1):
     cfg = run.model
-    kw = dict(remat=run.dist.remat, use_pallas=run.lrd.use_pallas_kernel)
+    kw = dict(remat=run.dist.remat, use_pallas=kernel_policy(run, phase))
     if cfg.family == "encdec":
         memory = encdec_mod.encode(params, batch["frames"], cfg,
                                    remat=run.dist.remat)
@@ -84,11 +105,12 @@ def _loss_fn(params, batch, run: RunConfig, phase: int):
         params = freezing.apply_freeze(params, mask)
     need_h = cfg.use_mtp
     logits, _, aux, hidden = _forward_full(params, batch, run,
-                                           return_hidden=need_h, mode="train")
+                                           return_hidden=need_h, mode="train",
+                                           phase=phase)
     loss = cross_entropy(logits, batch["labels"])
     if cfg.use_mtp:
         mtp_lg = lm.mtp_logits(params, hidden, batch["tokens"], cfg,
-                               use_pallas=run.lrd.use_pallas_kernel)
+                               use_pallas=kernel_policy(run, phase))
         # padded shift-by-one: predict labels shifted left, mask last 2 slots
         mtp_labels = jnp.roll(batch["labels"], -1, axis=1)
         loss = loss + cfg.mtp_loss_weight * cross_entropy(
@@ -199,7 +221,7 @@ def build_serve_step(run: RunConfig, mesh):
     def serve_step(params, cache, token, pos, extras=None):
         act = ACT_RULES_SP if run.dist.sequence_parallel else ACT_RULES
         with axis_rules(mesh, act=act, params=_param_rules(run)):
-            kw = dict(use_pallas=run.lrd.use_pallas_kernel)
+            kw = dict(use_pallas=kernel_policy(run))
             if cfg.family == "encdec":
                 memory = (extras or {}).get("memory")
                 logits, new_cache = encdec_mod.decode(

@@ -69,7 +69,9 @@ def build_run(args) -> RunConfig:
         shape=shape,
         lrd=LRDConfig(enabled=args.lrd, alpha=args.alpha,
                       rank_quantize=not args.no_rank_opt,
-                      freeze_mode=args.freeze, min_dim=args.lrd_min_dim),
+                      freeze_mode=args.freeze, min_dim=args.lrd_min_dim,
+                      use_pallas_kernel=args.use_pallas,
+                      pallas_interpret=args.pallas_interpret),
         dist=DistConfig(fsdp=args.fsdp, remat=args.remat,
                         microbatches=args.microbatches,
                         grad_compression=args.grad_compression),
@@ -95,6 +97,11 @@ def main(argv=None):
     ap.add_argument("--lrd-min-dim", type=int, default=128)
     ap.add_argument("--freeze", default="none",
                     choices=["none", "regular", "sequential"])
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="fused low-rank kernels, fwd+bwd (TPU; with "
+                         "--pallas-interpret also CPU validation)")
+    ap.add_argument("--pallas-interpret", action="store_true",
+                    help="run Pallas kernels in interpret mode")
     ap.add_argument("--optimizer", default="sgdm", choices=["sgdm", "adamw"])
     ap.add_argument("--lr", type=float, default=1e-2)
     ap.add_argument("--warmup", type=int, default=10)

@@ -20,14 +20,25 @@ from repro.kernels import ops as kops
 Params = Dict[str, Any]
 
 
-def linear(p: Params, x: jax.Array, *, use_pallas: bool = False) -> jax.Array:
-    """y = x @ W (+ b), where W may be factorized as u @ v (LRD)."""
+def linear(p: Params, x: jax.Array, *,
+           use_pallas: "bool | kops.KernelPolicy" = False) -> jax.Array:
+    """y = x @ W (+ b), where W may be factorized as u @ v (LRD).
+
+    ``use_pallas`` is either the legacy bool or a :class:`kops.KernelPolicy`
+    carrying the static sequential-freezing group and block sizes; every
+    model forwards it verbatim, so the launch layer sets it once per
+    compiled step (see launch/steps.py).
+    """
     if "kernel" in p:
         y = jnp.dot(x, p["kernel"], preferred_element_type=jnp.float32).astype(x.dtype)
     else:
         u, v = p["u"], p["v"]
-        if use_pallas:
-            y = kops.lowrank_apply(x, u, v)
+        pol = kops.as_policy(use_pallas)
+        if pol.use_pallas:
+            y = kops.lowrank_apply(
+                x, u, v, interpret=pol.interpret,
+                block_m=pol.block_m, block_k=pol.block_k, block_n=pol.block_n,
+                freeze_group=pol.freeze_group)
         else:
             t = jnp.dot(x, u, preferred_element_type=jnp.float32).astype(x.dtype)
             y = jnp.dot(t, v, preferred_element_type=jnp.float32).astype(x.dtype)
@@ -140,13 +151,26 @@ def ffn_init(dec, key, path: str, d: int, f: int, activation: str, dtype,
     }
 
 
-def ffn(p: Params, x: jax.Array, *, use_pallas: bool = False) -> jax.Array:
+def ffn(p: Params, x: jax.Array, *,
+        use_pallas: "bool | kops.KernelPolicy" = False) -> jax.Array:
     from repro.distributed import shard  # local import to avoid cycles
 
     if "gate" in p:
-        g = linear(p["gate"], x, use_pallas=use_pallas)
-        u = linear(p["up"], x, use_pallas=use_pallas)
-        h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(x.dtype)
+        pol = kops.as_policy(use_pallas)
+        if (pol.use_pallas and "u" in p["gate"] and "u" in p["up"]
+                and "bias" not in p["gate"] and "bias" not in p["up"]):
+            # Both branches factorized: one fused SwiGLU-first-half kernel —
+            # the rank-r intermediates AND the two (M, F) branch outputs stay
+            # in VMEM (falls back internally on indivisible shapes).
+            h = kops.lowrank_ffn_apply(
+                x, p["gate"]["u"], p["gate"]["v"], p["up"]["u"], p["up"]["v"],
+                interpret=pol.interpret, block_m=pol.block_m,
+                block_k=pol.block_k, block_n=pol.block_n,
+                freeze_group=pol.freeze_group)
+        else:
+            g = linear(p["gate"], x, use_pallas=use_pallas)
+            u = linear(p["up"], x, use_pallas=use_pallas)
+            h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(x.dtype)
     else:
         h = jax.nn.gelu(linear(p["wi"], x, use_pallas=use_pallas).astype(jnp.float32)).astype(x.dtype)
     if h.ndim == 3:

@@ -19,9 +19,11 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.core.decompose import Decomposer
 from repro.distributed import shard
+from repro.kernels.ops import KernelPolicy
 from repro.models import attention, moe as moe_mod, ssm
 from repro.models.attention import gqa_apply, gqa_init, mla_apply, mla_init
 from repro.models.common import (Params, cross_entropy, embed, embedding_init,
@@ -110,7 +112,7 @@ def _scan_stack(stacked: Params, h: jax.Array, body, cache: Optional[Params],
         # Barrier keeps the remat stash in the carry's own dtype (bf16):
         # without it XLA's convert-sinking stores an extra fp32 copy of
         # every layer input (measured 2x stash memory on the dry-run).
-        carry = jax.lax.optimization_barrier(carry)
+        carry = compat.optimization_barrier(carry)
         h_new, new_lc, aux = body(lp, carry, lc)
         return h_new, (new_lc, aux)
 
@@ -128,7 +130,7 @@ def _scan_stack(stacked: Params, h: jax.Array, body, cache: Optional[Params],
             @functools.partial(jax.checkpoint, prevent_cse=False)
             def group_body(carry, xs):
                 gp, gc = xs
-                carry = jax.lax.optimization_barrier(carry)
+                carry = compat.optimization_barrier(carry)
                 h_new, ys = jax.lax.scan(inner_body, carry, (gp, gc))
                 return h_new, ys
 
@@ -257,10 +259,17 @@ def lm_apply(
     pos=None,
     vision_embeddings: Optional[jax.Array] = None,
     remat: str = "none",
-    use_pallas: bool = False,
+    use_pallas: "bool | KernelPolicy" = False,
     return_hidden: bool = False,
 ):
-    """Returns (logits, new_cache, aux[, hidden])."""
+    """Returns (logits, new_cache, aux[, hidden]).
+
+    ``use_pallas`` (bool or :class:`repro.kernels.ops.KernelPolicy`) is
+    forwarded verbatim through every layer body down to
+    ``models.common.linear``/``ffn`` — the launch layer uses the policy form
+    to carry the static sequential-freezing group into the fused-kernel VJPs
+    without per-layer plumbing.
+    """
     b, s = tokens.shape
     hd = cfg.resolved_head_dim
     h = embed(p["embed"], tokens).astype(cfg.cdtype)
@@ -437,7 +446,7 @@ def _zamba_shared_apply(sp, h, x0, cfg, rope, mode, lc, pos, use_pallas):
 # --------------------------------------------------------------------------
 
 def mtp_logits(p: Params, h: jax.Array, tokens: jax.Array, cfg: ModelConfig,
-               *, use_pallas: bool = False) -> jax.Array:
+               *, use_pallas: "bool | KernelPolicy" = False) -> jax.Array:
     """Depth-1 multi-token prediction: predict t+2 from (h_t, emb(t+1))."""
     mtp = p["mtp"]
     # shift-by-one, padded back to S so seq stays divisible for the MoE EP

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.distributed import current_mesh, shard
 from repro.models import common
@@ -218,7 +219,7 @@ def _moe_ep(p: Params, x: jax.Array, cfg: ModelConfig):
     ex = p["experts"]
     gate_w, up_w, down_w = ex["gate"], ex["up"], ex["down"]
     if "kernel" in gate_w:
-        wrapped = jax.shard_map(
+        wrapped = shard_map(
             functools.partial(_moe_ep_kernels, cfg=cfg, ep_size=ep_size, dtype=x.dtype),
             mesh=mesh,
             in_specs=(
@@ -233,7 +234,7 @@ def _moe_ep(p: Params, x: jax.Array, cfg: ModelConfig):
                          up_w["kernel"], down_w["kernel"])
         return y, aux
     # LRD experts: same wiring with (u, v) factor pairs per matrix.
-    wrapped_lrd = jax.shard_map(
+    wrapped_lrd = shard_map(
         functools.partial(_moe_ep_lrd, cfg=cfg, ep_size=ep_size, dtype=x.dtype),
         mesh=mesh,
         in_specs=(

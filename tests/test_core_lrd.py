@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")  # not in every container
 from hypothesis import given, settings, strategies as st
 
 from repro.core import decompose, freezing, rank_opt, svd, tucker

@@ -25,11 +25,12 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys
 sys.path.insert(0, {str(Path("src").resolve())!r})
 import jax, numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import load_checkpoint
 from repro.checkpoint.store import latest_checkpoint
+from repro.compat import make_mesh
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 shardings = {{
     "layer": {{"kernel": NamedSharding(mesh, P("data", "model"))}},
     "scale": NamedSharding(mesh, P(None)),
