@@ -16,7 +16,6 @@ from repro.configs.base import (DistConfig, LRDConfig, OptimConfig, RunConfig,
                                 ShapeConfig)
 from repro.launch import steps
 from repro.launch.mesh import make_host_mesh
-from repro.optim import init_optimizer
 
 ARCHS = ("smollm-360m", "olmoe-1b-7b", "xlstm-350m")
 METHODS = {
@@ -40,8 +39,8 @@ def run(seq=64, batch=4, iters=3):
                 optim=OptimConfig(name="sgdm", lr=1e-3, warmup_steps=0,
                                   total_steps=100))
             params, _ = steps.init_params(run_cfg, jax.random.PRNGKey(0))
-            state = steps.TrainState(params, init_optimizer(run_cfg.optim, params))
             phase = 0 if lrd_kw.get("freeze_mode") else -1
+            state, _ = steps.make_train_state(run_cfg.optim, params, phase)
             fn = jax.jit(functools.partial(steps.build_train_step(run_cfg, mesh),
                                            phase=phase))
             key = jax.random.PRNGKey(1)

@@ -51,7 +51,7 @@ def main() -> None:
                             kernel_microbench, lm_throughput,
                             table1_resnet_throughput,
                             table2_decomposition_time, table3_accuracy,
-                            table4_vit)
+                            table4_vit, train_freezing)
 
     if args.smoke:
         guard("Kernel microbench (fused low-rank fwd+bwd, per freeze phase)",
@@ -59,6 +59,9 @@ def main() -> None:
         guard("Fig 2: rank sweep (analytic only)",
               lambda: fig2_rank_sweep.main(measured=False),
               record_as="fig2_rank_sweep")
+        guard("Train freezing: step walltime + live-state bytes "
+              "(partitioned state)",
+              train_freezing.main, record_as="train_freezing")
         _section("summary")
         if failures:
             print(f"FAILED sections: {failures}")
@@ -85,6 +88,9 @@ def main() -> None:
           fig3_freezing_convergence.main)
     guard("Kernel microbench (fused low-rank fwd+bwd, per freeze phase)",
           kernel_microbench.main, record_as="kernel_microbench")
+    guard("Train freezing: step walltime + live-state bytes "
+          "(partitioned state)",
+          train_freezing.main, record_as="train_freezing")
     guard("LM train/decode throughput (smoke archs)", lm_throughput.main)
 
     _section("summary")

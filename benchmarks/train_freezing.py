@@ -1,0 +1,95 @@
+"""Partitioned-train-state bench: per freeze mode (none/regular/sequential),
+train-step walltime on the smoke LM config plus LIVE-STATE bytes —
+params + grad accumulators + optimizer state — taken from ``abstract_state``
+(the same stand-ins the 512-device dry-run lowers against), so the numbers
+are structural, not sampled.
+
+The paper's Algorithm-2 claim, restated for the train state: during any
+frozen phase the frozen factor group holds no gradient, no accumulator, and
+no optimizer state.  ``sequential`` therefore shows the same per-phase bytes
+as ``regular`` but alternates which factor group pays them.
+
+  PYTHONPATH=src python -m benchmarks.train_freezing
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.configs import get_smoke_config
+from repro.configs.base import (DistConfig, LRDConfig, OptimConfig, RunConfig,
+                                ShapeConfig)
+from repro.launch import steps
+from repro.launch.mesh import make_host_mesh
+
+ARCH = "smollm-360m"
+# (mode, phases to measure): sequential alternates 0/1, the others sit still
+MODES = (("none", (-1,)), ("regular", (0,)), ("sequential", (0, 1)))
+
+
+def _bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def run(seq=64, batch=4, microbatches=2, iters=3):
+    rows = []
+    mesh = make_host_mesh(1, 1)
+    cfg = get_smoke_config(ARCH)
+    for mode, phases in MODES:
+        run_cfg = RunConfig(
+            model=cfg, shape=ShapeConfig("b", seq, batch, "train"),
+            lrd=LRDConfig(enabled=True, min_dim=16, rank_quantize=False,
+                          freeze_mode=mode),
+            dist=DistConfig(fsdp=False, remat="none",
+                            microbatches=microbatches),
+            optim=OptimConfig(name="adamw", lr=1e-3, warmup_steps=0,
+                              total_steps=100))
+        params, _ = steps.init_params(run_cfg, jax.random.PRNGKey(0))
+        train = steps.build_train_step(run_cfg, mesh)
+        key = jax.random.PRNGKey(1)
+        batch_d = {"tokens": jax.random.randint(key, (batch, seq), 0,
+                                                cfg.vocab_size),
+                   "labels": jax.random.randint(key, (batch, seq), 0,
+                                                cfg.vocab_size)}
+        for phase in phases:
+            state, _ = steps.make_train_state(run_cfg.optim, params, phase)
+            fn = jax.jit(functools.partial(train, phase=phase))
+            t = time_fn(lambda: fn(state, batch_d), iters=iters)
+
+            a = steps.abstract_state(run_cfg, mesh, phase=phase)
+            params_b = _bytes(a.trainable) + _bytes(a.frozen)
+            # grad accumulators cover the trainable partition in accum_dtype
+            adt = jnp.dtype(run_cfg.dist.accum_dtype).itemsize
+            grads_b = sum(x.size * adt
+                          for x in jax.tree_util.tree_leaves(a.trainable))
+            opt_b = _bytes(a.opt)
+            rows.append({
+                "arch": ARCH, "mode": mode, "phase": phase,
+                "us_per_step": t * 1e6,
+                "params_bytes": params_b, "grad_bytes": grads_b,
+                "opt_bytes": opt_b,
+                "live_state_bytes": params_b + grads_b + opt_b,
+            })
+    return rows
+
+
+def main(**kw):
+    rows = run(**kw)
+    print("# train freezing: mode/phase, us_per_step, "
+          "live_state_bytes (params+grads+opt)")
+    base = next(r for r in rows if r["mode"] == "none")
+    for r in rows:
+        d = 100 * (r["live_state_bytes"] / base["live_state_bytes"] - 1)
+        print(f"{r['mode']}/phase{r['phase']},{r['us_per_step']:.0f},"
+              f"{r['live_state_bytes']}B ({d:+.1f}% vs none; "
+              f"opt {r['opt_bytes']}B, grads {r['grad_bytes']}B)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -20,7 +20,6 @@ from repro.core.freezing import phase_for_epoch
 from repro.data import LMBatchIterator
 from repro.launch import steps
 from repro.launch.mesh import make_host_mesh
-from repro.optim import init_optimizer
 from repro.serving import ServeEngine
 
 
@@ -39,15 +38,20 @@ def main():
     params, plan = steps.init_params(run)
     print(plan.summary())
 
-    # 3. fine-tune with sequential freezing: one compiled step per phase
+    # 3. fine-tune with sequential freezing: one compiled step per phase,
+    # state partitioned per phase (frozen factors leave the optimizer)
     mesh = make_host_mesh(1, 1)
     train = steps.build_train_step(run, mesh)
-    opt = init_optimizer(run.optim, params)
-    state = steps.TrainState(params, opt)
+    cur_phase = phase_for_epoch(0, "sequential")
+    state, parked = steps.make_train_state(run.optim, params, cur_phase)
     data = iter(LMBatchIterator(cfg.vocab_size, 64, 8))
     fns = {}
     for step in range(60):
         phase = phase_for_epoch(step // 15, "sequential")
+        if phase != cur_phase:  # rotate opt moments, repartition params
+            state, parked = steps.repartition_state(run.optim, state, parked,
+                                                    phase)
+            cur_phase = phase
         if phase not in fns:
             fns[phase] = jax.jit(functools.partial(train, phase=phase))
         batch = {k: jnp.asarray(v) for k, v in next(data).items()}

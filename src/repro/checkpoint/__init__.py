@@ -1,2 +1,3 @@
 from repro.checkpoint.store import (CheckpointManager, load_checkpoint,  # noqa: F401
-                                    save_checkpoint)
+                                    pack_phased_state, save_checkpoint,
+                                    unpack_phased_state)

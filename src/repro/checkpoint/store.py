@@ -27,10 +27,59 @@ import json
 import os
 import shutil
 from pathlib import Path
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Partitioned-state packing (DESIGN.md §7)
+# --------------------------------------------------------------------------
+#
+# The live train state is partitioned for the current freezing phase
+# (trainable / frozen / opt-over-trainable) with the frozen group's
+# optimizer moments parked host-side.  On disk we store the MERGED trees —
+# params plus full per-group moment slices — and record the phase in the
+# manifest ``extra``; a restore re-partitions for the saved phase, so
+# resuming lands mid-schedule with every group's momentum intact, on any
+# mesh, regardless of which phase the checkpoint was written in.
+
+def pack_phased_state(state, parked) -> Dict[str, Any]:
+    """(partitioned TrainState-like, parked (mu, nu)) -> merged plain dict.
+
+    ``state`` is any ``(trainable, frozen, (step, mu, nu))`` triple;
+    ``parked`` holds the frozen group's moment slices.  The result contains
+    no ``None`` holes and checkpoints like any other pytree.
+    """
+    from repro.core import freezing
+
+    trainable, frozen, opt = state
+    step, mu, nu = opt
+    full_mu, full_nu = freezing.merge_moments((mu, nu), parked)
+    return {"params": freezing.merge(trainable, frozen), "step": step,
+            "mu": full_mu, "nu": full_nu}
+
+
+def unpack_phased_state(saved: Dict[str, Any], phase: int):
+    """Inverse of :func:`pack_phased_state` for a given freezing phase.
+
+    Returns ``((trainable, frozen, (step, mu, nu)), parked)`` — plain
+    tuples/trees; the caller rebuilds its typed wrappers and device_puts.
+    """
+    from repro.core import freezing
+
+    if not isinstance(saved, dict) or "params" not in saved:
+        raise ValueError(
+            "unpack_phased_state: checkpoint is not in the phased dict "
+            "format {'params', 'step', 'mu', 'nu'} — it was likely written "
+            "by a pre-partitioned-TrainState build and cannot be resumed "
+            "here; restart from params-only or re-save with "
+            "pack_phased_state")
+    trainable, frozen = freezing.partition(saved["params"], phase)
+    (mu, nu), parked = freezing.partition_moments(
+        (saved["mu"], saved["nu"]), phase)
+    return (trainable, frozen, (saved["step"], mu, nu)), parked
 
 
 def _flatten(tree: Any, prefix: str = "") -> Dict[str, Any]:
@@ -170,8 +219,14 @@ class CheckpointManager:
             self._pending.result()
             self._pending = None
 
+    def due(self, step: int) -> bool:
+        """True when ``maybe_save(step, ...)`` would save — lets callers
+        skip building the (possibly packed/merged) state snapshot on the
+        steps that won't persist it."""
+        return self._preempted or (step > 0 and step % self.save_every == 0)
+
     def maybe_save(self, step: int, state, extra=None) -> bool:
-        if self._preempted or (step > 0 and step % self.save_every == 0):
+        if self.due(step):
             self.wait()  # one in-flight save at a time
             host_state = jax.tree_util.tree_map(
                 lambda x: np.asarray(jax.device_get(x)), state)

@@ -195,6 +195,7 @@ class LRDConfig:
     alpha: float = 2.0
     rank_quantize: bool = True  # Algorithm 1 (analytic-tpu) on by default
     freeze_mode: str = "none"  # none | regular | sequential
+    epochs_per_phase: int = 1  # Algorithm-2 alternation cadence (sequential)
     use_pallas_kernel: bool = False  # fused low-rank matmul (TPU only)
     min_dim: int = 128  # skip matrices smaller than this on either side
     # Pallas launch knobs (block sizes must divide the layer dims or the

@@ -2,6 +2,7 @@
 
 from repro.core import decompose, freezing, policy, rank_opt, svd, tucker  # noqa: F401
 from repro.core.decompose import Decomposer, DecompositionPlan, apply_lrd  # noqa: F401
-from repro.core.freezing import FreezeMode, apply_freeze, freeze_mask, phase_for_epoch  # noqa: F401
+from repro.core.freezing import (FreezeMode, apply_freeze, freeze_mask, merge,  # noqa: F401
+                                 partition, phase_for_epoch)
 from repro.core.policy import LM_DEFAULT, NO_LRD, RESNET_DEFAULT, DecompositionPolicy  # noqa: F401
 from repro.core.rank_opt import TPU_V5E, HardwareModel, optimize_rank, quantize_rank  # noqa: F401

@@ -10,22 +10,35 @@ even epochs train group 1 (the SVD second factor / Tucker core, matching the
 paper's "freeze L(0) [and L(2)], unfreeze L(1)"), odd epochs swap.  Regular
 (non-sequential) freezing is phase 0 forever.
 
-JAX adaptation: PyTorch's ``requires_grad=False`` becomes
-``jax.lax.stop_gradient`` applied under a **static** phase.  The train loop
-compiles one step per phase (two cache entries); XLA dead-code-eliminates the
-frozen factors' whole backward + optimizer update, which is where the paper's
-training-time saving comes from.  Non-decomposed params are always trainable.
+JAX adaptation: PyTorch's ``requires_grad=False`` becomes a **partitioned
+parameter pytree** under a **static** phase.  ``partition(params, phase)``
+splits the tree into a ``(trainable, frozen)`` pair; the train step
+differentiates, accumulates, and optimizes over the trainable partition
+only, and the frozen subtree rides through the loss as a non-differentiated
+argument (DESIGN.md §7).  The train loop compiles one step per phase (two
+cache entries); frozen factors never enter the backward, the grad
+accumulators, or the optimizer state — the paper's training-time saving
+holds by construction rather than by dead-code elimination.  Non-decomposed
+params are always trainable.
+
+Partition contract: both returned trees keep the *full* nested-dict
+structure of ``params`` (name-keyed like :func:`freeze_mask`), with ``None``
+at the complementary positions.  ``None`` is an empty pytree node, so
+``tree_map``/``tree_leaves`` over a partition skip the holes, and
+``merge(trainable, frozen)`` reconstructs the original tree exactly.
 """
 
 from __future__ import annotations
 
 import enum
-from typing import Any, Dict
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 __all__ = ["FreezeMode", "factor_group", "freeze_mask", "apply_freeze",
+           "partition", "merge", "check_partition",
+           "partition_moments", "merge_moments",
            "phase_for_epoch", "frozen_group_for_phase"]
 
 # Leaf names of decomposed factors -> group id (see module docstring).
@@ -48,13 +61,17 @@ def factor_group(leaf_name: str) -> int | None:
     return None
 
 
-def phase_for_epoch(epoch: int, mode: FreezeMode | str) -> int:
+def phase_for_epoch(epoch: int, mode: FreezeMode | str,
+                    epochs_per_phase: int = 1) -> int:
+    """Algorithm-2 phase at ``epoch``.  ``epochs_per_phase`` sets the
+    alternation cadence: the frozen group swaps every ``epochs_per_phase``
+    epochs (paper uses 1)."""
     mode = FreezeMode(mode)
     if mode == FreezeMode.NONE:
         return -1  # sentinel: no freezing
     if mode == FreezeMode.REGULAR:
         return 0
-    return int(epoch) % 2
+    return (int(epoch) // max(int(epochs_per_phase), 1)) % 2
 
 
 def frozen_group_for_phase(phase: int) -> int | None:
@@ -63,8 +80,8 @@ def frozen_group_for_phase(phase: int) -> int | None:
     This is the static value the launch layer threads into the fused-kernel
     VJPs (``kernels.ops.KernelPolicy.freeze_group``): it guarantees the
     frozen factor's backward kernel is never *emitted*, complementing the
-    ``stop_gradient`` masking below which only guarantees the jnp paths'
-    backward is never *built*.
+    state partitioning (:func:`partition`) under which the jnp paths never
+    request a frozen cotangent in the first place.
     """
     return phase if phase in (0, 1) else None
 
@@ -96,13 +113,90 @@ def freeze_mask(params: Any, phase: int) -> Any:
 def apply_freeze(params: Any, mask: Any) -> Any:
     """stop_gradient on frozen leaves; identity elsewhere.
 
-    Called inside the loss function so the *same* param tree is threaded
-    through the optimizer — frozen leaves simply receive zero gradient, and
-    with a static phase XLA removes their entire backward graph.
+    Legacy full-tree masking, kept for the self-contained ResNet/ViT
+    benchmark trainers.  The production train step uses :func:`partition`
+    instead: frozen leaves never enter differentiation at all.
     """
     return jax.tree_util.tree_map(
         lambda p, m: p if m else jax.lax.stop_gradient(p), params, mask
     )
+
+
+def partition(params: Any, phase: int) -> Tuple[Any, Any]:
+    """Split ``params`` into ``(trainable, frozen)`` for ``phase``.
+
+    Both outputs keep the full nested-dict structure of ``params`` with
+    ``None`` holes at the complementary positions (module docstring), so any
+    path-keyed walk (e.g. ``distributed.sharding.param_specs``) resolves the
+    same specs for a partition as for the full tree.  ``phase == -1`` puts
+    everything in the trainable partition.
+    """
+    mask = freeze_mask(params, phase)
+    trainable = jax.tree_util.tree_map(
+        lambda m, p: p if m else None, mask, params)
+    frozen = jax.tree_util.tree_map(
+        lambda m, p: None if m else p, mask, params)
+    return trainable, frozen
+
+
+def merge(trainable: Any, frozen: Any) -> Any:
+    """Inverse of :func:`partition`: fill each ``None`` hole in one tree
+    with the leaf from the other.  ``merge(*partition(p, phase)) == p`` for
+    any phase."""
+    return jax.tree_util.tree_map(
+        lambda a, b: b if a is None else a, trainable, frozen,
+        is_leaf=lambda x: x is None)
+
+
+def merge_moments(moments: Tuple[Any, Any], parked: Tuple[Any, Any]):
+    """Merge active ``(mu, nu)`` optimizer-moment slices with their parked
+    complements.  ``nu`` is ``()`` for SGD and passes through."""
+    mu, nu = moments
+    return (merge(mu, parked[0]),
+            nu if nu == () else merge(nu, parked[1]))
+
+
+def partition_moments(moments: Tuple[Any, Any], phase: int):
+    """Split full ``(mu, nu)`` moment trees into (active, parked) slice
+    pairs for ``phase`` — the single source of truth for the Algorithm-2
+    moment rotation (``launch.steps.repartition_state``) and the checkpoint
+    pack/unpack (``checkpoint.store``)."""
+    mu, nu = moments
+    mu_a, mu_p = partition(mu, phase)
+    if nu == ():
+        return (mu_a, ()), (mu_p, ())
+    nu_a, nu_p = partition(nu, phase)
+    return (mu_a, nu_a), (mu_p, nu_p)
+
+
+def check_partition(trainable: Any, frozen: Any, phase: int) -> None:
+    """Raise if ``(trainable, frozen)`` was not produced for ``phase``.
+
+    The train step's static ``phase`` drives the fused-kernel freeze_group;
+    a state partitioned for a different phase would silently train the wrong
+    factor group.  Trace-time only — walks dict keys, touches no data.
+    """
+
+    def walk(tr, fr, path=""):
+        if isinstance(tr, dict) or isinstance(fr, dict):
+            tr_d = tr if isinstance(tr, dict) else {}
+            fr_d = fr if isinstance(fr, dict) else {}
+            for k in set(tr_d) | set(fr_d):
+                walk(tr_d.get(k), fr_d.get(k), f"{path}/{k}")
+            return
+        name = path.rsplit("/", 1)[-1]
+        g = factor_group(name)
+        should_freeze = (phase >= 0 and g == phase)
+        if should_freeze and fr is None:
+            raise ValueError(
+                f"partition/phase mismatch: {path} should be frozen at "
+                f"phase {phase} but sits in the trainable partition")
+        if not should_freeze and tr is None:
+            raise ValueError(
+                f"partition/phase mismatch: {path} should be trainable at "
+                f"phase {phase} but sits in the frozen partition")
+
+    walk(trainable, frozen)
 
 
 def trainable_fraction(mask: Any, params: Any) -> float:

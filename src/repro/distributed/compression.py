@@ -43,8 +43,12 @@ def value_and_grad_compressed(
 ) -> Tuple[jax.Array, Any]:
     """(loss, grads) with int8 pod-axis gradient sync.
 
-    Falls back to plain value_and_grad when compression is off or the mesh
-    has no pod axis (single-pod: nothing crosses DCN).
+    ``params`` is the TRAINABLE partition of the train state (a
+    ``None``-holed tree under sequential freezing — DESIGN.md §7): frozen
+    factors are differentiated, quantized, and synced exactly never; the
+    returned grad tree carries the same holes.  Falls back to plain
+    value_and_grad when compression is off or the mesh has no pod axis
+    (single-pod: nothing crosses DCN).
     """
     if mode == "none" or "pod" not in mesh.axis_names:
         return jax.value_and_grad(loss_fn)(params, batch)

@@ -208,7 +208,13 @@ def _logical_axes_for(path: str, ndim: int) -> Tuple[Optional[str], ...]:
 
 def param_specs(params: Any, mesh: Optional[Mesh] = None,
                 rules: Optional[RuleTable] = None) -> Any:
-    """PartitionSpec pytree for a param tree (works on arrays or SDS)."""
+    """PartitionSpec pytree for a param tree (works on arrays or SDS).
+
+    ``None`` leaves — the holes of a freezing partition
+    (``core.freezing.partition``) — map to ``None``, so the spec tree of a
+    partition lines up leaf-for-leaf with the partition itself and path
+    resolution is identical to the full tree's.
+    """
     mesh = mesh or _CTX.mesh
     rules = rules or _CTX.param_rules or PARAM_RULES
     assert mesh is not None, "param_specs needs a mesh (pass one or use axis_rules)"
@@ -216,6 +222,8 @@ def param_specs(params: Any, mesh: Optional[Mesh] = None,
     def walk(tree, path):
         if isinstance(tree, dict):
             return {k: walk(v, f"{path}/{k}" if path else k) for k, v in tree.items()}
+        if tree is None:
+            return None
         axes = _logical_axes_for(path, tree.ndim)
         return _resolve_spec(tree.shape, axes, rules, mesh)
 

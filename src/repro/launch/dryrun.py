@@ -91,7 +91,11 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool, lrd: bool,
         step = steps.build_train_step(run, mesh)
         phase = 0 if freeze else -1
         fn = functools.partial(step, phase=phase)
-        args = (steps.abstract_state(run, mesh), steps.batch_specs(run, mesh))
+        # the abstract state is partitioned for the SAME static phase as the
+        # step: the frozen partition has no opt/grad stand-ins at all, so
+        # memory_analysis reports the structural freeze saving.
+        args = (steps.abstract_state(run, mesh, phase=phase),
+                steps.batch_specs(run, mesh))
         donate = (0,)  # donate TrainState: new params/opt alias the old buffers
     elif shape.kind == "prefill":
         fn = steps.build_prefill_step(run, mesh)

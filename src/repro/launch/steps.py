@@ -3,12 +3,19 @@ plus abstract ``input_specs`` (ShapeDtypeStruct stand-ins with shardings —
 the dry-run lowers against these, no allocation ever happens).
 
 The sequential-freezing phase is a STATIC argument: the returned train_step
-is ``step_fn(phase)(state, batch)``; each phase compiles once.  The phase
-reaches the model twice: as a ``stop_gradient`` mask on the frozen factors
-(jnp paths — the backward is never built, DESIGN.md §2) and as the
-``freeze_group`` of the :class:`repro.kernels.ops.KernelPolicy` threaded
-through every layer's ``use_pallas`` argument (fused Pallas paths — the
-frozen factor's backward kernel is never emitted, DESIGN.md §3).
+is ``step_fn(phase)(state, batch)``; each phase compiles once.  The
+:class:`TrainState` is PARTITIONED for that phase (DESIGN.md §7): frozen
+factors live in ``state.frozen`` and enter the loss as a non-differentiated
+argument, so ``value_and_grad``, the microbatch scan accumulators, grad
+compression, the grad norm, and the optimizer all run over
+``state.trainable`` only — no gradient, no accumulator, and no optimizer
+state ever exists for a frozen factor.  The phase also reaches the fused
+Pallas paths as the ``freeze_group`` of the
+:class:`repro.kernels.ops.KernelPolicy` threaded through every layer's
+``use_pallas`` argument (the frozen factor's backward kernel is never
+emitted, DESIGN.md §3).  ``repartition_state`` performs the host-side
+Algorithm-2 phase swap, rotating parked optimizer moments so unfreezing
+never resets them.
 """
 
 from __future__ import annotations
@@ -19,6 +26,7 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import RunConfig
@@ -31,13 +39,72 @@ from repro.distributed.compression import value_and_grad_compressed
 from repro.kernels.ops import KernelPolicy
 from repro.models import encdec as encdec_mod, lm
 from repro.models.common import cross_entropy
-from repro.optim import init_optimizer
-from repro.optim.optimizers import apply_updates
+from repro.optim import init_moments, init_optimizer
+from repro.optim.optimizers import OptState, apply_updates
 
 
 class TrainState(NamedTuple):
-    params: Any
+    """Partitioned train state (DESIGN.md §7).
+
+    ``trainable``/``frozen`` are complementary ``None``-holed views of one
+    param tree (``core.freezing.partition``); ``opt`` is allocated over the
+    trainable partition only.  ``state.params`` merges the two views back
+    into the full tree (pure restructuring — no copies).
+    """
+    trainable: Any
+    frozen: Any
     opt: Any
+
+    @property
+    def params(self) -> Any:
+        return freezing.merge(self.trainable, self.frozen)
+
+
+def make_train_state(optim_cfg, params, phase: int = -1):
+    """Partition ``params`` for ``phase`` and build the matching state.
+
+    Returns ``(state, parked)`` where ``parked = (mu, nu)`` holds the zero
+    optimizer moments of the frozen partition as HOST numpy arrays — they
+    are not part of the compiled step and never occupy device memory, which
+    is what makes the freeze-phase optimizer-state saving real.
+    """
+    trainable, frozen = freezing.partition(params, phase)
+    opt = init_optimizer(optim_cfg, trainable)
+    return (TrainState(trainable, frozen, opt),
+            init_moments(optim_cfg, frozen, on_host=True))
+
+
+def _park(tree):
+    """Move moment leaves to host numpy (releases the device buffers)."""
+    return jax.tree_util.tree_map(
+        lambda x: np.asarray(jax.device_get(x)), tree)
+
+
+def _unpark(tree):
+    """device_put host leaves rotating back into the live state; leaves
+    already on device pass through."""
+    return jax.tree_util.tree_map(
+        lambda x: x if isinstance(x, jax.Array) else jax.device_put(x), tree)
+
+
+def repartition_state(optim_cfg, state: TrainState, parked, new_phase: int):
+    """Host-side Algorithm-2 phase transition.
+
+    Re-partitions the merged params for ``new_phase`` and rotates the
+    per-group optimizer-state slices: moments of leaves that stay trainable
+    carry over in place, moments of newly-frozen leaves move to host
+    (parked), and the parked moments of newly-unfrozen leaves are
+    device_put back in — alternation never resets momentum / Adam moments,
+    and parked slices never sit in device memory.  Call it between steps,
+    outside jit.
+    """
+    params = freezing.merge(state.trainable, state.frozen)
+    trainable, frozen = freezing.partition(params, new_phase)
+    active, parked = freezing.partition_moments(
+        freezing.merge_moments((state.opt.mu, state.opt.nu), parked),
+        new_phase)
+    opt = OptState(state.opt.step, *(_unpark(t) for t in active))
+    return TrainState(trainable, frozen, opt), tuple(_park(t) for t in parked)
 
 
 def make_decomposer(run: RunConfig) -> Decomposer:
@@ -98,11 +165,13 @@ def _forward_full(params, batch, run: RunConfig, *, return_hidden=False,
     return logits, cache, aux, None
 
 
-def _loss_fn(params, batch, run: RunConfig, phase: int):
+def _loss_fn(trainable, frozen, batch, run: RunConfig, phase: int):
+    """Loss over the trainable partition.  ``frozen`` is a plain (non-
+    differentiated) argument: the merged tree re-enters the forward, but no
+    cotangent is ever requested for a frozen leaf — no ``stop_gradient``
+    masking, the backward over frozen factors is simply never built."""
     cfg = run.model
-    if phase >= 0:
-        mask = freezing.freeze_mask(params, phase)
-        params = freezing.apply_freeze(params, mask)
+    params = freezing.merge(trainable, frozen)
     need_h = cfg.use_mtp
     logits, _, aux, hidden = _forward_full(params, batch, run,
                                            return_hidden=need_h, mode="train",
@@ -141,10 +210,15 @@ def build_train_step(run: RunConfig, mesh):
     """Returns step(phase) -> fn(state, batch) -> (state, metrics)."""
 
     def train_step(state: TrainState, batch, *, phase: int):
+        # trace-time guard: the static phase must match the partition, or
+        # the fused-kernel freeze_group would elide the wrong backward.
+        freezing.check_partition(state.trainable, state.frozen, phase)
         act = ACT_RULES_SP if run.dist.sequence_parallel else ACT_RULES
         prm = _param_rules(run)
         with axis_rules(mesh, act=act, params=prm):
-            loss_for = functools.partial(_loss_fn, run=run, phase=phase)
+            def loss_for(trainable, b):
+                return _loss_fn(trainable, state.frozen, b, run=run,
+                                phase=phase)
 
             m = run.dist.microbatches
             if m > 1:
@@ -153,7 +227,9 @@ def build_train_step(run: RunConfig, mesh):
                 # 26 GiB/device for qwen2-72b's down-proj factor alone).
                 # Under ZeRO-1 they take the optimizer-state (data-sharded)
                 # layout: the per-microbatch add lowers to a reduce-scatter.
-                gspecs = param_specs(state.params, mesh, _opt_rules(run))
+                # Only the trainable partition is accumulated: frozen
+                # factors contribute no carry at all.
+                gspecs = param_specs(state.trainable, mesh, _opt_rules(run))
                 pin = lambda t: jax.tree_util.tree_map(
                     lambda x, sp: jax.lax.with_sharding_constraint(
                         x, NamedSharding(mesh, sp)), t, gspecs)
@@ -172,31 +248,32 @@ def build_train_step(run: RunConfig, mesh):
 
                 def acc_body(carry, mb):
                     gsum, lsum = carry
-                    l, g = jax.value_and_grad(loss_for)(state.params, mb)
+                    l, g = jax.value_and_grad(loss_for)(state.trainable, mb)
                     gsum = pin(jax.tree_util.tree_map(
                         lambda a, b: (a + b.astype(adt)), gsum, g))
                     return (gsum, lsum + l), None
 
                 zeros = pin(jax.tree_util.tree_map(
-                    lambda p: jnp.zeros(p.shape, adt), state.params))
+                    lambda p: jnp.zeros(p.shape, adt), state.trainable))
                 (gsum, lsum), _ = jax.lax.scan(
                     acc_body, (zeros, jnp.zeros((), jnp.float32)), batch_r)
                 loss = lsum / m
                 grads = jax.tree_util.tree_map(lambda g: g / m, gsum)
             else:
                 loss, grads = value_and_grad_compressed(
-                    loss_for, state.params, batch, mesh, run.dist.grad_compression)
+                    loss_for, state.trainable, batch, mesh,
+                    run.dist.grad_compression)
 
-            mask = (freezing.freeze_mask(state.params, phase) if phase >= 0 else None)
-            new_params, new_opt = apply_updates(run.optim, state.params, grads,
-                                                state.opt, mask)
+            new_trainable, new_opt = apply_updates(run.optim, state.trainable,
+                                                   grads, state.opt)
             # square in the grad dtype, accumulate in f32: a f32 pre-cast
             # materializes a full fp32 copy of every grad leaf at once
             # (measured +5 GiB/device on deepseek-v3).
             gnorm = jnp.sqrt(sum(
                 jnp.sum(jnp.square(g), dtype=jnp.float32)
                 for g in jax.tree_util.tree_leaves(grads)))
-            return TrainState(new_params, new_opt), {"loss": loss, "grad_norm": gnorm}
+            return (TrainState(new_trainable, state.frozen, new_opt),
+                    {"loss": loss, "grad_norm": gnorm})
 
     return train_step
 
@@ -306,10 +383,30 @@ def abstract_params(run: RunConfig, mesh):
         shapes, specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
 
 
-def abstract_state(run: RunConfig, mesh):
+def run_phase(run: RunConfig, epoch: int = 0) -> int:
+    """The freezing phase the run sits in at ``epoch`` (-1 when LRD or
+    freezing is off)."""
+    if not run.lrd.enabled:
+        return -1
+    return freezing.phase_for_epoch(epoch, run.lrd.freeze_mode,
+                                    run.lrd.epochs_per_phase)
+
+
+def abstract_state(run: RunConfig, mesh, phase: Optional[int] = None):
+    """Abstract partitioned TrainState: eval_shape over init + shardings.
+
+    The optimizer-state stand-ins cover the trainable partition only, so
+    dry-run memory analysis reports the structural freeze-phase saving
+    (≈ half the factor moments during any frozen phase).  ``phase`` defaults
+    to the run's epoch-0 phase.
+    """
+    if phase is None:
+        phase = run_phase(run)
     aparams = abstract_params(run, mesh)
-    opt_shapes = jax.eval_shape(lambda p: init_optimizer(run.optim, p), aparams)
-    ospecs = param_specs(aparams, mesh, _opt_rules(run))
+    trainable, frozen = freezing.partition(aparams, phase)
+    opt_shapes = jax.eval_shape(lambda p: init_optimizer(run.optim, p),
+                                trainable)
+    ospecs = param_specs(trainable, mesh, _opt_rules(run))
 
     def attach(shapes):
         return jax.tree_util.tree_map(
@@ -319,9 +416,8 @@ def abstract_state(run: RunConfig, mesh):
 
     mu = attach(opt_shapes.mu)
     nu = attach(opt_shapes.nu) if opt_shapes.nu != () else ()
-    from repro.optim.optimizers import OptState
     step_s = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
-    return TrainState(aparams, OptState(step_s, mu, nu))
+    return TrainState(trainable, frozen, OptState(step_s, mu, nu))
 
 
 def abstract_cache(run: RunConfig, mesh):

@@ -7,7 +7,12 @@ EMA.  Elastic: checkpoints are mesh-agnostic, so restarting with a different
 device count re-shards on load.
 
 Sequential freezing (paper Algorithm 2) drives a *static* phase argument:
-one compiled step per phase, swapped per epoch.
+one compiled step per phase, swapped per epoch.  The train state is
+PARTITIONED per phase (DESIGN.md §7): at every phase boundary the loop
+re-partitions params host-side and rotates the parked optimizer-moment
+slices, so frozen factors cost nothing inside the step and unfreezing never
+resets momentum.  Checkpoints store the merged trees plus the phase, so a
+restore lands mid-schedule.
 
 Usage (CPU demo):
   PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
@@ -24,15 +29,15 @@ from pathlib import Path
 import jax
 import numpy as np
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import (CheckpointManager, pack_phased_state,
+                              unpack_phased_state)
 from repro.configs import SHAPES, get_config, get_smoke_config
 from repro.configs.base import (DistConfig, LRDConfig, OptimConfig, RunConfig,
                                 ShapeConfig)
-from repro.core.freezing import FreezeMode, phase_for_epoch
 from repro.data import LMBatchIterator
 from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.optim import init_optimizer
+from repro.optim.optimizers import OptState
 
 
 class StragglerMonitor:
@@ -70,6 +75,7 @@ def build_run(args) -> RunConfig:
         lrd=LRDConfig(enabled=args.lrd, alpha=args.alpha,
                       rank_quantize=not args.no_rank_opt,
                       freeze_mode=args.freeze, min_dim=args.lrd_min_dim,
+                      epochs_per_phase=args.epochs_per_phase,
                       use_pallas_kernel=args.use_pallas,
                       pallas_interpret=args.pallas_interpret),
         dist=DistConfig(fsdp=args.fsdp, remat=args.remat,
@@ -97,6 +103,8 @@ def main(argv=None):
     ap.add_argument("--lrd-min-dim", type=int, default=128)
     ap.add_argument("--freeze", default="none",
                     choices=["none", "regular", "sequential"])
+    ap.add_argument("--epochs-per-phase", type=int, default=1,
+                    help="Algorithm-2 alternation cadence (sequential)")
     ap.add_argument("--use-pallas", action="store_true",
                     help="fused low-rank kernels, fwd+bwd (TPU; with "
                          "--pallas-interpret also CPU validation)")
@@ -123,8 +131,12 @@ def main(argv=None):
     params, plan = steps_mod.init_params(run)
     if run.lrd.enabled:
         print(plan.summary())
-    opt = init_optimizer(run.optim, params)
-    state = steps_mod.TrainState(params, opt)
+
+    def phase_at(step: int) -> int:
+        return steps_mod.run_phase(run, step // args.steps_per_epoch)
+
+    cur_phase = phase_at(0)
+    state, parked = steps_mod.make_train_state(run.optim, params, cur_phase)
 
     data = LMBatchIterator(run.model.vocab_size, run.shape.seq_len,
                            run.shape.global_batch, seed=args.seed + 17)
@@ -136,16 +148,17 @@ def main(argv=None):
     restored = ckpt.restore()
     if restored is not None:
         saved_state, start_step, extra = restored
-        # namedtuples round-trip as plain tuples: rebuild the typed wrappers
-        from repro.optim.optimizers import OptState
-        params_r, opt_r = saved_state
+        cur_phase = int(extra.get("phase", -1))
+        (tr, fr, opt_r), parked_h = unpack_phased_state(saved_state, cur_phase)
         put = lambda t: jax.tree_util.tree_map(
             lambda x: jax.device_put(np.asarray(x)), t)
-        state = steps_mod.TrainState(put(params_r),
+        state = steps_mod.TrainState(put(tr), put(fr),
                                      OptState(put(opt_r[0]), put(opt_r[1]),
                                               put(opt_r[2])))
+        # parked moments stay HOST-side (numpy) — see steps.make_train_state
+        parked = tuple(jax.tree_util.tree_map(np.asarray, t) for t in parked_h)
         data.load_state_dict(extra["data"])
-        print(f"[resume] from step {start_step}")
+        print(f"[resume] from step {start_step} (phase {cur_phase})")
 
     train_step = steps_mod.build_train_step(run, mesh)
     step_fns = {}
@@ -161,8 +174,15 @@ def main(argv=None):
     losses = []
     for step in range(start_step, args.steps):
         epoch = step // args.steps_per_epoch
-        phase = phase_for_epoch(epoch, FreezeMode(run.lrd.freeze_mode)) \
-            if run.lrd.enabled else -1
+        phase = phase_at(step)
+        if phase != cur_phase:
+            # Algorithm-2 phase swap: repartition params and rotate the
+            # parked optimizer moments (host-side, no device compute).
+            state, parked = steps_mod.repartition_state(run.optim, state,
+                                                        parked, phase)
+            cur_phase = phase
+            print(f"[phase] epoch {epoch}: now training group {1 - phase}, "
+                  f"group {phase} frozen out of the step")
         batch = {k: jax.device_put(v) for k, v in next(it).items()}
         t0 = time.perf_counter()
         state, metrics = fn_for(phase)(state, batch)
@@ -176,7 +196,9 @@ def main(argv=None):
             print(f"step {step:5d} epoch {epoch:3d} phase {phase:2d} "
                   f"loss {loss:.4f} gnorm {float(metrics['grad_norm']):.3f} "
                   f"{dt*1e3:.0f}ms")
-        if ckpt.maybe_save(step + 1, state, extra={"data": data.state_dict()}):
+        if ckpt.due(step + 1) and ckpt.maybe_save(
+                step + 1, pack_phased_state(state, parked),
+                extra={"data": data.state_dict(), "phase": phase}):
             if ckpt.preempted:
                 print(f"[preempt] checkpointed at step {step + 1}, exiting")
                 return state, losses

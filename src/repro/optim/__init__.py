@@ -1,2 +1,3 @@
 from repro.optim.optimizers import (  # noqa: F401
-    OptState, adamw_init, init_optimizer, make_schedule, sgdm_init)
+    OptState, adamw_init, init_moments, init_optimizer, make_schedule,
+    sgdm_init)

@@ -1,20 +1,25 @@
-"""Optimizers (SGD+momentum — the paper's choice — and AdamW) with
-freeze-mask-aware updates and LR schedules.  No optax offline; these are
-small, well-tested pure-JAX implementations.
+"""Optimizers (SGD+momentum — the paper's choice — and AdamW) and LR
+schedules.  No optax offline; these are small, well-tested pure-JAX
+implementations.
 
-Freeze semantics (paper §2.2): frozen leaves receive *zero gradient* via
-stop_gradient in the loss, so their update is exactly 0 and their optimizer
-state is left untouched — implemented by masking the state update with the
-same static mask, letting XLA DCE the whole frozen branch.
+Freeze semantics (paper §2.2, DESIGN.md §7): the train state is partitioned
+— frozen leaves are ``None`` holes in the trees handed to ``init_optimizer``
+and ``apply_updates``, so the optimizer allocates and updates state for the
+trainable partition only.  There is no mask and no per-leaf branching: a
+frozen factor simply does not exist here.  Its moments are parked host-side
+(``init_moments`` builds the zero slices) and rotated back in at the
+Algorithm-2 phase swap (``launch.steps.repartition_state``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+import functools
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import OptimConfig
 
@@ -58,30 +63,42 @@ def adamw_init(params, state_dtype=jnp.float32) -> OptState:
 
 
 def init_optimizer(cfg: OptimConfig, params) -> OptState:
+    """Optimizer state over ``params`` — pass the *trainable partition* and
+    the state is allocated for exactly those leaves (``None`` holes carry
+    through as holes)."""
     dt = jnp.dtype(cfg.state_dtype)
     return sgdm_init(params, dt) if cfg.name == "sgdm" else adamw_init(params, dt)
 
 
-def apply_updates(cfg: OptimConfig, params, grads, state: OptState,
-                  mask: Optional[Any] = None):
-    """One optimizer step.  ``mask`` leaves (False = frozen) skip both the
-    param update and the state update (the paper's requires_grad=False)."""
+def init_moments(cfg: OptimConfig, params, on_host: bool = False) -> Tuple[Any, Any]:
+    """Zero ``(mu, nu)`` slices over ``params`` (``nu = ()`` for SGD) — the
+    parked moments of a frozen partition, without the step counter.
+
+    ``on_host=True`` allocates numpy arrays: parked slices must stay OFF
+    the accelerator or the freeze-phase HBM saving evaporates — the frozen
+    group's moments would sit in device memory next to the live state.
+    """
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = ((lambda t: jax.tree_util.tree_map(
+                  lambda p: np.zeros(p.shape, dt), t))
+             if on_host else functools.partial(_zeros_like, dtype=dt))
+    nu = () if cfg.name == "sgdm" else zeros(params)
+    return zeros(params), nu
+
+
+def apply_updates(cfg: OptimConfig, params, grads, state: OptState):
+    """One optimizer step over the trainable partition.  All trees share the
+    same hole structure; frozen leaves never reach this function."""
     lr = make_schedule(cfg)(state.step)
     step = state.step + 1
 
-    def leafwise(fn, *trees):
-        if mask is None:
-            return jax.tree_util.tree_map(fn, *trees)
-        return jax.tree_util.tree_map(
-            lambda m, *ls: fn(*ls) if m else ls[0], mask, *trees)
-
     sdt = jnp.dtype(cfg.state_dtype)
     if cfg.name == "sgdm":
-        new_mu = leafwise(
+        new_mu = jax.tree_util.tree_map(
             lambda mu, g: (cfg.momentum * mu.astype(jnp.float32)
                            + g.astype(jnp.float32)).astype(sdt),
             state.mu, grads)
-        new_params = leafwise(
+        new_params = jax.tree_util.tree_map(
             lambda p, mu: (p.astype(jnp.float32) - lr * (mu.astype(jnp.float32)
                            + cfg.weight_decay * p.astype(jnp.float32))).astype(p.dtype),
             params, new_mu)
@@ -92,11 +109,11 @@ def apply_updates(cfg: OptimConfig, params, grads, state: OptState,
     t = step.astype(jnp.float32)
     c1 = 1.0 - b1 ** t
     c2 = 1.0 - b2 ** t
-    new_mu = leafwise(
+    new_mu = jax.tree_util.tree_map(
         lambda mu, g: (b1 * mu.astype(jnp.float32)
                        + (1 - b1) * g.astype(jnp.float32)).astype(sdt),
         state.mu, grads)
-    new_nu = leafwise(
+    new_nu = jax.tree_util.tree_map(
         lambda nu, g: (b2 * nu.astype(jnp.float32)
                        + (1 - b2) * jnp.square(g.astype(jnp.float32))).astype(sdt),
         state.nu, grads)
@@ -108,10 +125,5 @@ def apply_updates(cfg: OptimConfig, params, grads, state: OptState,
                 - lr * (mhat / (jnp.sqrt(vhat) + eps)
                         + cfg.weight_decay * p.astype(jnp.float32))).astype(p.dtype)
 
-    if mask is None:
-        new_params = jax.tree_util.tree_map(upd, params, new_mu, new_nu)
-    else:
-        new_params = jax.tree_util.tree_map(
-            lambda m, p, mu, nu: upd(p, mu, nu) if m else p,
-            mask, params, new_mu, new_nu)
+    new_params = jax.tree_util.tree_map(upd, params, new_mu, new_nu)
     return new_params, OptState(step, new_mu, new_nu)

@@ -15,7 +15,6 @@ from repro.configs.base import (DistConfig, LRDConfig, OptimConfig, RunConfig,
                                 ShapeConfig)
 from repro.launch import steps
 from repro.launch.mesh import make_host_mesh
-from repro.optim import init_optimizer
 from repro.serving.engine import pad_cache_preserving_cross
 
 SEQ, BATCH = 32, 2
@@ -50,7 +49,7 @@ def test_smoke_train_step(arch):
     run = _run_for(arch)
     key = jax.random.PRNGKey(0)
     params, _ = steps.init_params(run, key)
-    state = steps.TrainState(params, init_optimizer(run.optim, params))
+    state, _ = steps.make_train_state(run.optim, params)
     mesh = make_host_mesh(1, 1)
     fn = jax.jit(functools.partial(steps.build_train_step(run, mesh), phase=-1))
     batch = _batch_for(run.model, key)
@@ -73,12 +72,13 @@ def test_smoke_train_with_lrd_and_freezing(arch):
     run = _run_for(arch, lrd=True, freeze=True)
     key = jax.random.PRNGKey(1)
     params, plan = steps.init_params(run, key)
-    state = steps.TrainState(params, init_optimizer(run.optim, params))
+    state, parked = steps.make_train_state(run.optim, params, 0)
     mesh = make_host_mesh(1, 1)
     train = steps.build_train_step(run, mesh)
     batch = _batch_for(run.model, key)
     st1, m1 = jax.jit(functools.partial(train, phase=0))(state, batch)
-    st2, m2 = jax.jit(functools.partial(train, phase=1))(st1, batch)
+    st1r, parked = steps.repartition_state(run.optim, st1, parked, 1)
+    st2, m2 = jax.jit(functools.partial(train, phase=1))(st1r, batch)
     assert np.isfinite(float(m1["loss"])) and np.isfinite(float(m2["loss"]))
 
     # phase 0 must leave group-0 factors (u/first/last) untouched

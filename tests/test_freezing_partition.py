@@ -1,0 +1,130 @@
+"""Partitioned-train-state contract (DESIGN.md §7): partition/merge
+round-trips, the check_partition guard, the phase_for_epoch cadence, the
+moment-rotation helpers, and host residency of parked moments.
+
+Standalone module (no hypothesis dependency) so these run in containers
+where tests/test_core_lrd.py self-skips.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import freezing
+
+
+def _toy_params():
+    return {
+        "layer": {"wq": {"u": jnp.ones((4, 2)), "v": jnp.ones((2, 4))},
+                  "ffn": {"kernel": jnp.ones((4, 4))}},
+        "conv": {"first": jnp.ones((4, 2)), "core": jnp.ones((2, 2, 3, 3)),
+                 "last": jnp.ones((2, 4))},
+        "norm": {"scale": jnp.ones((4,))},
+    }
+
+
+def test_phase_for_epoch_cadence():
+    # epochs_per_phase stretches the Algorithm-2 alternation
+    got = [freezing.phase_for_epoch(e, "sequential", epochs_per_phase=2)
+           for e in range(8)]
+    assert got == [0, 0, 1, 1, 0, 0, 1, 1]
+    got3 = [freezing.phase_for_epoch(e, "sequential", epochs_per_phase=3)
+            for e in range(7)]
+    assert got3 == [0, 0, 0, 1, 1, 1, 0]
+    # regular/none ignore the cadence
+    assert freezing.phase_for_epoch(5, "regular", epochs_per_phase=4) == 0
+    assert freezing.phase_for_epoch(5, "none", epochs_per_phase=4) == -1
+
+
+def test_partition_merge_roundtrip_and_structure():
+    p = _toy_params()
+    for phase in (-1, 0, 1):
+        tr, fr = freezing.partition(p, phase)
+        merged = freezing.merge(tr, fr)
+        assert (jax.tree_util.tree_structure(merged)
+                == jax.tree_util.tree_structure(p))
+        for a, b in zip(jax.tree_util.tree_leaves(merged),
+                        jax.tree_util.tree_leaves(p)):
+            assert a is b  # merge restores the very same leaves
+        # complementary: every position is a leaf in exactly one partition
+        n = len(jax.tree_util.tree_leaves(p))
+        assert (len(jax.tree_util.tree_leaves(tr))
+                + len(jax.tree_util.tree_leaves(fr))) == n
+    # phase 0 partitions name-wise like freeze_mask
+    tr0, fr0 = freezing.partition(p, 0)
+    assert tr0["layer"]["wq"]["u"] is None and fr0["layer"]["wq"]["u"] is not None
+    assert fr0["layer"]["wq"]["v"] is None and tr0["layer"]["wq"]["v"] is not None
+    assert fr0["conv"]["first"] is not None and fr0["conv"]["last"] is not None
+    assert tr0["conv"]["core"] is not None
+    assert tr0["norm"]["scale"] is not None and fr0["norm"]["scale"] is None
+    # both partitions keep the full dict structure (treedef-stable walk)
+    assert set(tr0) == set(fr0) == set(p)
+    # phase -1: nothing frozen
+    tr, fr = freezing.partition(p, -1)
+    assert len(jax.tree_util.tree_leaves(fr)) == 0
+
+
+def test_check_partition_guards_phase_mismatch():
+    p = _toy_params()
+    tr0, fr0 = freezing.partition(p, 0)
+    freezing.check_partition(tr0, fr0, 0)  # matching: no raise
+    with pytest.raises(ValueError, match="partition/phase mismatch"):
+        freezing.check_partition(tr0, fr0, 1)
+    with pytest.raises(ValueError, match="partition/phase mismatch"):
+        freezing.check_partition(tr0, fr0, -1)
+    # malformed input: a whole subtree missing from the trainable side must
+    # not silently pass (the walk covers the union of keys)
+    broken_tr = dict(tr0, layer=None)
+    with pytest.raises(ValueError, match="partition/phase mismatch"):
+        freezing.check_partition(broken_tr, fr0, 0)
+
+
+def test_moment_rotation_helpers_roundtrip():
+    p = _toy_params()
+    mu = jax.tree_util.tree_map(lambda x: x * 2.0, p)
+    nu = jax.tree_util.tree_map(lambda x: x * 3.0, p)
+    for nu_in in (nu, ()):
+        (mu_a, nu_a), (mu_p, nu_p) = freezing.partition_moments(
+            (mu, nu_in), 0)
+        full_mu, full_nu = freezing.merge_moments((mu_a, nu_a), (mu_p, nu_p))
+        for a, b in zip(jax.tree_util.tree_leaves(full_mu),
+                        jax.tree_util.tree_leaves(mu)):
+            assert a is b
+        if nu_in == ():
+            assert nu_a == () and nu_p == () and full_nu == ()
+        else:
+            assert (len(jax.tree_util.tree_leaves(nu_a))
+                    + len(jax.tree_util.tree_leaves(nu_p))
+                    == len(jax.tree_util.tree_leaves(nu)))
+
+
+def test_parked_moments_stay_on_host():
+    """The freeze-phase HBM saving is only real if parked slices are numpy,
+    not device arrays — at init and across repartition swaps."""
+    from repro.configs.base import OptimConfig
+    from repro.launch import steps
+    from repro.optim.optimizers import apply_updates
+
+    params = {"wq": {"u": jnp.ones((4, 2)), "v": jnp.ones((2, 4))}}
+    cfg = OptimConfig(name="adamw", lr=0.1, warmup_steps=0, total_steps=10,
+                      weight_decay=0.0, schedule="constant")
+    state, parked = steps.make_train_state(cfg, params, 0)
+    for t in parked:
+        for leaf in jax.tree_util.tree_leaves(t):
+            assert isinstance(leaf, np.ndarray)
+            assert not isinstance(leaf, jax.Array)
+    # build some moments, swap twice; parked stays host, live stays device
+    grads = jax.tree_util.tree_map(lambda x: jnp.full_like(x, 0.5),
+                                   state.trainable)
+    tr, opt = apply_updates(cfg, state.trainable, grads, state.opt)
+    state = steps.TrainState(tr, state.frozen, opt)
+    for phase in (1, 0):
+        state, parked = steps.repartition_state(cfg, state, parked, phase)
+        for t in parked:
+            for leaf in jax.tree_util.tree_leaves(t):
+                assert isinstance(leaf, np.ndarray)
+                assert not isinstance(leaf, jax.Array)
+        for tree in (state.opt.mu, state.opt.nu):
+            for leaf in jax.tree_util.tree_leaves(tree):
+                assert isinstance(leaf, jax.Array)

@@ -198,7 +198,6 @@ def test_train_step_jaxpr_elides_frozen_factor_kernels():
     from repro.data import LMBatchIterator
     from repro.launch import steps
     from repro.launch.mesh import make_host_mesh
-    from repro.optim import init_optimizer
 
     cfg = get_smoke_config("smollm-360m")
     run = RunConfig(
@@ -211,13 +210,13 @@ def test_train_step_jaxpr_elides_frozen_factor_kernels():
         optim=OptimConfig(name="sgdm", lr=1e-2, warmup_steps=2, total_steps=8))
     params, plan = steps.init_params(run, jax.random.PRNGKey(0))
     assert any(lp.use_decomposed for lp in plan.layers.values())
-    state = steps.TrainState(params, init_optimizer(run.optim, params))
     mesh = make_host_mesh(1, 1)
     train = steps.build_train_step(run, mesh)
     it = iter(LMBatchIterator(cfg.vocab_size, 16, 4, seed=0))
     batch = {k: jnp.asarray(v) for k, v in next(it).items()}
 
     def jaxpr_for(phase):
+        state, _ = steps.make_train_state(run.optim, params, phase)
         return str(jax.make_jaxpr(functools.partial(train, phase=phase))(
             state, batch))
 
@@ -242,7 +241,6 @@ def test_train_step_runs_with_pallas_interpret():
     from repro.data import LMBatchIterator
     from repro.launch import steps
     from repro.launch.mesh import make_host_mesh
-    from repro.optim import init_optimizer
 
     cfg = get_smoke_config("smollm-360m")
     run = RunConfig(
@@ -254,7 +252,7 @@ def test_train_step_runs_with_pallas_interpret():
         dist=DistConfig(fsdp=False, remat="none"),
         optim=OptimConfig(name="sgdm", lr=1e-2, warmup_steps=2, total_steps=8))
     params, _ = steps.init_params(run, jax.random.PRNGKey(0))
-    state = steps.TrainState(params, init_optimizer(run.optim, params))
+    state, _ = steps.make_train_state(run.optim, params, 0)
     train = steps.build_train_step(run, make_host_mesh(1, 1))
     it = iter(LMBatchIterator(cfg.vocab_size, 16, 4, seed=0))
     step0 = jax.jit(functools.partial(train, phase=0))
@@ -262,3 +260,88 @@ def test_train_step_runs_with_pallas_interpret():
         batch = {k: jnp.asarray(v) for k, v in next(it).items()}
         state, m = step0(state, batch)
     assert np.isfinite(float(m["loss"]))
+
+
+def _leaf_paths(tree):
+    """'/'-joined dict paths of non-None leaves."""
+    out = []
+
+    def walk(t, path=""):
+        if isinstance(t, dict):
+            for k, v in t.items():
+                walk(v, f"{path}/{k}")
+        elif t is not None:
+            out.append(path)
+
+    walk(tree)
+    return out
+
+
+def test_train_step_opt_state_and_accumulators_exclude_frozen():
+    """Extends the kernel-absence contract to the optimizer and the grad
+    accumulators: at a frozen phase, the train step's output opt state has
+    NO leaf for the frozen factor group, and the microbatch scan carries no
+    accumulator of a frozen-factor shape — structurally absent from the
+    jaxpr, not zero-filled."""
+    from repro.configs import get_smoke_config
+    from repro.configs.base import (DistConfig, LRDConfig, OptimConfig,
+                                    RunConfig, ShapeConfig)
+    from repro.data import LMBatchIterator
+    from repro.launch import steps
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = get_smoke_config("smollm-360m")
+    run = RunConfig(
+        model=cfg, shape=ShapeConfig("t", 16, 4, "train"),
+        lrd=LRDConfig(enabled=True, min_dim=16, freeze_mode="sequential",
+                      rank_quantize=False),
+        dist=DistConfig(fsdp=False, remat="none", microbatches=2),
+        optim=OptimConfig(name="adamw", lr=1e-3, warmup_steps=2,
+                          total_steps=8))
+    params, _ = steps.init_params(run, jax.random.PRNGKey(0))
+    train = steps.build_train_step(run, make_host_mesh(1, 1))
+    it = iter(LMBatchIterator(cfg.vocab_size, 16, 4, seed=0))
+    batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+
+    def outputs_and_jaxpr(phase):
+        state, _ = steps.make_train_state(run.optim, params, phase)
+        fn = functools.partial(train, phase=phase)
+        out, _ = jax.eval_shape(fn, state, batch)
+        return state, out, jax.make_jaxpr(fn)(state, batch)
+
+    def scan_carry_shapes(jaxpr):
+        shapes = []
+        for eqn in jaxpr.jaxpr.eqns:
+            if eqn.primitive.name == "scan":
+                nc = eqn.params["num_consts"]
+                ncar = eqn.params["num_carry"]
+                shapes += [tuple(v.aval.shape)
+                           for v in eqn.invars[nc:nc + ncar]]
+        return shapes
+
+    # phase 0: every u factor is frozen
+    state0, out0, jaxpr0 = outputs_and_jaxpr(0)
+    u_paths = [p for p in _leaf_paths(params) if p.endswith("/u")]
+    assert u_paths  # decomposition actually produced factors
+    for tree in (out0.opt.mu, out0.opt.nu):
+        mu_paths = _leaf_paths(tree)
+        assert mu_paths and not any(p.endswith("/u") for p in mu_paths)
+    assert any(p.endswith("/v") for p in _leaf_paths(out0.opt.mu))
+
+    # grad-accumulator check: frozen-factor shapes absent from the scan
+    # carry (shapes unique to the frozen partition, so no false match)
+    frozen_shapes = {tuple(l.shape)
+                     for l in jax.tree_util.tree_leaves(state0.frozen)}
+    train_shapes = {tuple(l.shape)
+                    for l in jax.tree_util.tree_leaves(state0.trainable)}
+    frozen_only = frozen_shapes - train_shapes
+    assert frozen_only  # the check below has teeth
+    carry0 = scan_carry_shapes(jaxpr0)
+    assert carry0  # microbatch scan present
+    assert not (set(carry0) & frozen_only)
+    assert set(carry0) & train_shapes  # trainable accumulators ARE carried
+
+    # unfrozen baseline: the same shapes DO appear in the scan carry
+    _, out_all, jaxpr_all = outputs_and_jaxpr(-1)
+    assert set(scan_carry_shapes(jaxpr_all)) & frozen_only
+    assert any(p.endswith("/u") for p in _leaf_paths(out_all.opt.mu))

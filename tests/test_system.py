@@ -22,20 +22,27 @@ from repro.optim.optimizers import apply_updates
 
 def _train(arch="smollm-360m", steps_n=12, lrd=False, freeze="none",
            microbatches=1, seq=32, batch=4, seed=0, steps_per_epoch=4,
-           n_batches=2):
+           n_batches=2, optimizer="sgdm", epochs_per_phase=1,
+           total_steps=None):
     """Train on a small cycling batch set (memorization): exercises the full
     step machinery with a guaranteed loss-decrease signal."""
     cfg = get_smoke_config(arch)
     run = RunConfig(
         model=cfg, shape=ShapeConfig("t", seq, batch, "train"),
         lrd=LRDConfig(enabled=lrd, min_dim=16, freeze_mode=freeze,
+                      epochs_per_phase=epochs_per_phase,
                       rank_quantize=False),  # smoke dims < MXU tile: skip the guard
         dist=DistConfig(fsdp=False, remat="none", microbatches=microbatches),
-        optim=OptimConfig(name="sgdm", lr=2e-2, warmup_steps=2,
-                          total_steps=steps_n))
+        optim=OptimConfig(name=optimizer, lr=2e-2, warmup_steps=2,
+                          total_steps=total_steps or steps_n))
     key = jax.random.PRNGKey(seed)
     params, plan = steps.init_params(run, key)
-    state = steps.TrainState(params, init_optimizer(run.optim, params))
+
+    def phase_at(i):
+        return steps.run_phase(run, i // steps_per_epoch)
+
+    cur_phase = phase_at(0)
+    state, parked = steps.make_train_state(run.optim, params, cur_phase)
     mesh = make_host_mesh(1, 1)
     train = steps.build_train_step(run, mesh)
     data = LMBatchIterator(cfg.vocab_size, seq, batch, seed=seed)
@@ -45,8 +52,11 @@ def _train(arch="smollm-360m", steps_n=12, lrd=False, freeze="none",
     fns = {}
     losses = []
     for i in range(steps_n):
-        phase = freezing.phase_for_epoch(i // steps_per_epoch, freeze) \
-            if lrd and freeze != "none" else -1
+        phase = phase_at(i)
+        if phase != cur_phase:
+            state, parked = steps.repartition_state(run.optim, state, parked,
+                                                    phase)
+            cur_phase = phase
         if phase not in fns:
             fns[phase] = jax.jit(functools.partial(train, phase=phase))
         state, m = fns[phase](state, batches[i % n_batches])
@@ -120,19 +130,130 @@ def test_checkpoint_atomicity_ignores_incomplete():
         assert latest_checkpoint(d).name == "step_00000001"
 
 
-def test_optimizer_freeze_mask_preserves_state_and_params():
+def test_optimizer_partition_excludes_frozen_leaves():
+    """Partitioned semantics: the frozen factor has NO optimizer state and
+    never reaches apply_updates; merge returns it untouched."""
     params = {"wq": {"u": jnp.ones((4, 2)), "v": jnp.ones((2, 4))}}
-    grads = {"wq": {"u": jnp.full((4, 2), 0.5), "v": jnp.full((2, 4), 0.5)}}
     cfg = OptimConfig(name="sgdm", lr=0.1, warmup_steps=0, total_steps=10,
                       weight_decay=0.0, schedule="constant")
-    opt = init_optimizer(cfg, params)
-    mask = freezing.freeze_mask(params, 0)  # u frozen
-    new_params, new_opt = apply_updates(cfg, params, grads, opt, mask)
-    np.testing.assert_array_equal(np.asarray(new_params["wq"]["u"]),
+    trainable, frozen = freezing.partition(params, 0)  # u frozen
+    assert trainable["wq"]["u"] is None and frozen["wq"]["v"] is None
+    opt = init_optimizer(cfg, trainable)
+    # opt state exists for v only — u contributes no leaf at all
+    assert opt.mu["wq"]["u"] is None
+    assert len(jax.tree_util.tree_leaves(opt.mu)) == 1
+    grads = jax.tree_util.tree_map(lambda p: jnp.full_like(p, 0.5), trainable)
+    new_trainable, new_opt = apply_updates(cfg, trainable, grads, opt)
+    merged = freezing.merge(new_trainable, frozen)
+    np.testing.assert_array_equal(np.asarray(merged["wq"]["u"]),
                                   np.asarray(params["wq"]["u"]))
-    assert float(jnp.sum(jnp.abs(new_opt.mu["wq"]["u"]))) == 0.0
-    assert not np.array_equal(np.asarray(new_params["wq"]["v"]),
+    assert not np.array_equal(np.asarray(merged["wq"]["v"]),
                               np.asarray(params["wq"]["v"]))
+    assert float(jnp.sum(jnp.abs(new_opt.mu["wq"]["v"]))) > 0.0
+
+
+def test_repartition_rotates_moments_without_reset():
+    """Algorithm-2 phase swap must carry momentum through freeze/unfreeze:
+    phase 0 trains v (builds mu_v), swap to phase 1 parks mu_v and restores
+    mu_u, swap back restores mu_v exactly."""
+    params = {"wq": {"u": jnp.ones((4, 2)), "v": jnp.ones((2, 4))}}
+    cfg = OptimConfig(name="sgdm", lr=0.1, warmup_steps=0, total_steps=10,
+                      weight_decay=0.0, schedule="constant")
+    state, parked = steps.make_train_state(cfg, params, 0)
+    grads = jax.tree_util.tree_map(lambda p: jnp.full_like(p, 0.5),
+                                   state.trainable)
+    new_trainable, new_opt = apply_updates(cfg, state.trainable, grads,
+                                           state.opt)
+    state = steps.TrainState(new_trainable, state.frozen, new_opt)
+    mu_v = np.asarray(state.opt.mu["wq"]["v"])
+    assert np.abs(mu_v).sum() > 0.0
+
+    state1, parked1 = steps.repartition_state(cfg, state, parked, 1)
+    assert state1.opt.mu["wq"]["v"] is None  # v moments parked...
+    np.testing.assert_array_equal(np.asarray(parked1[0]["wq"]["v"]), mu_v)
+    assert state1.opt.mu["wq"]["u"] is not None  # ...u moments live (zeros)
+
+    state0, parked0 = steps.repartition_state(cfg, state1, parked1, 0)
+    np.testing.assert_array_equal(np.asarray(state0.opt.mu["wq"]["v"]), mu_v)
+    # params round-trip untouched by the two swaps
+    for a, b in zip(jax.tree_util.tree_leaves(state.params),
+                    jax.tree_util.tree_leaves(state0.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_partitioned_step_matches_masked_reference_trajectory():
+    """Acceptance: the partitioned train step reproduces the pre-refactor
+    semantics (full-tree grads with stop_gradient masking + mask-skipped
+    SGD updates) to <= 1e-5 over a two-phase run on the smollm config."""
+    cfg = get_smoke_config("smollm-360m")
+    run = RunConfig(
+        model=cfg, shape=ShapeConfig("t", 32, 4, "train"),
+        lrd=LRDConfig(enabled=True, min_dim=16, freeze_mode="sequential",
+                      rank_quantize=False),
+        dist=DistConfig(fsdp=False, remat="none"),
+        optim=OptimConfig(name="sgdm", lr=2e-2, warmup_steps=2,
+                          total_steps=8, weight_decay=1e-4))
+    params, _ = steps.init_params(run, jax.random.PRNGKey(4))
+    data = LMBatchIterator(cfg.vocab_size, 32, 4, seed=4)
+    it = iter(data)
+    batches = [{k: jnp.asarray(v) for k, v in next(it).items()}
+               for _ in range(2)]
+
+    # --- reference: full-tree masked training (pre-refactor contract) -----
+    from repro.optim.optimizers import make_schedule
+    sched = make_schedule(run.optim)
+
+    def ref_loss(p, b, phase):
+        masked = freezing.apply_freeze(p, freezing.freeze_mask(p, phase))
+        none_holes = freezing.partition(masked, -1)[1]
+        return steps._loss_fn(masked, none_holes, b, run=run, phase=phase)
+
+    @functools.partial(jax.jit, static_argnums=(3,))
+    def ref_step(p, mu, opt_step, phase, b):
+        loss, g = jax.value_and_grad(ref_loss)(p, b, phase)
+        mask = freezing.freeze_mask(p, phase)
+        lr = sched(opt_step)
+        new_mu = jax.tree_util.tree_map(
+            lambda m, mu_l, g_l: (run.optim.momentum * mu_l + g_l) if m else mu_l,
+            mask, mu, g)
+        new_p = jax.tree_util.tree_map(
+            lambda m, p_l, mu_l: (p_l.astype(jnp.float32) - lr * (
+                mu_l + run.optim.weight_decay * p_l.astype(jnp.float32))
+            ).astype(p_l.dtype) if m else p_l,
+            mask, p, new_mu)
+        return new_p, new_mu, opt_step + 1, loss
+
+    ref_p = params
+    ref_mu = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    ref_losses, opt_step = [], jnp.zeros((), jnp.int32)
+    for i in range(8):
+        phase = freezing.phase_for_epoch(i // 4, "sequential")
+        ref_p, ref_mu, opt_step, l = ref_step(ref_p, ref_mu, opt_step, phase,
+                                              batches[i % 2])
+        ref_losses.append(float(l))
+
+    # --- partitioned path (same data, same init) --------------------------
+    mesh = make_host_mesh(1, 1)
+    train = steps.build_train_step(run, mesh)
+    state, parked = steps.make_train_state(run.optim, params, 0)
+    cur_phase, fns, losses = 0, {}, []
+    for i in range(8):
+        phase = freezing.phase_for_epoch(i // 4, "sequential")
+        if phase != cur_phase:
+            state, parked = steps.repartition_state(run.optim, state, parked,
+                                                    phase)
+            cur_phase = phase
+        if phase not in fns:
+            fns[phase] = jax.jit(functools.partial(train, phase=phase))
+        state, m = fns[phase](state, batches[i % 2])
+        losses.append(float(m["loss"]))
+
+    np.testing.assert_allclose(losses, ref_losses, rtol=0, atol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(state.params),
+                    jax.tree_util.tree_leaves(ref_p)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5)
 
 
 def test_data_pipeline_deterministic_and_resumable():
@@ -212,13 +333,81 @@ def test_checkpoint_preserves_tuple_structure():
     from repro.checkpoint import load_checkpoint, save_checkpoint
     from repro.checkpoint.store import latest_checkpoint
 
-    state = steps.TrainState({"w": jnp.ones((2, 2))},
-                             init_optimizer(OptimConfig(name="sgdm"),
-                                            {"w": jnp.ones((2, 2))}))
+    state, _ = steps.make_train_state(OptimConfig(name="sgdm"),
+                                      {"w": jnp.ones((2, 2))})
     with tempfile.TemporaryDirectory() as d:
         save_checkpoint(d, 1, state)
         restored, _, _ = load_checkpoint(latest_checkpoint(d))
-        assert isinstance(restored, tuple) and len(restored) == 2
-        params_r, opt_r = restored
+        assert isinstance(restored, tuple) and len(restored) == 3
+        params_r, frozen_r, opt_r = restored
         assert set(params_r) == {"w"}
+        assert frozen_r == {"w": None}  # partition holes survive the trip
         assert len(opt_r) == 3 and opt_r[2] == ()  # (step, mu, nu=())
+
+
+def test_checkpoint_roundtrip_across_phase_boundary():
+    """Save in phase 0, restore via the phased pack/unpack, continue into
+    phase 1: loss/metrics must match an uninterrupted run exactly."""
+    import tempfile
+
+    from repro.checkpoint import (CheckpointManager, pack_phased_state,
+                                  unpack_phased_state)
+    from repro.optim.optimizers import OptState
+
+    kw = dict(lrd=True, freeze="sequential", steps_per_epoch=4, seed=11,
+              optimizer="adamw")
+    full_losses, full_state, _ = _train(steps_n=10, **kw)
+
+    # re-run the first 3 steps (all phase 0) and checkpoint mid-phase-0
+    losses_a, state_a, _ = _train(steps_n=3, total_steps=10, **kw)
+    cfg = get_smoke_config("smollm-360m")
+    run = RunConfig(
+        model=cfg, shape=ShapeConfig("t", 32, 4, "train"),
+        lrd=LRDConfig(enabled=True, min_dim=16, freeze_mode="sequential",
+                      rank_quantize=False),
+        dist=DistConfig(fsdp=False, remat="none"),
+        optim=OptimConfig(name="adamw", lr=2e-2, warmup_steps=2,
+                          total_steps=10))
+    # parked moments after 3 steps of phase 0 are still the init zeros
+    _, parked_a = steps.make_train_state(run.optim, state_a.params, 0)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, save_every=1, keep=2, async_save=False)
+        assert mgr.maybe_save(3, pack_phased_state(state_a, parked_a),
+                              extra={"phase": 0})
+        saved, start_step, extra = mgr.restore()
+        assert start_step == 3 and extra["phase"] == 0
+        (tr, fr, opt_t), parked = unpack_phased_state(saved, extra["phase"])
+        state = steps.TrainState(
+            jax.tree_util.tree_map(jnp.asarray, tr),
+            jax.tree_util.tree_map(jnp.asarray, fr),
+            OptState(jnp.asarray(opt_t[0]),
+                     jax.tree_util.tree_map(jnp.asarray, opt_t[1]),
+                     jax.tree_util.tree_map(jnp.asarray, opt_t[2])))
+        parked = tuple(jax.tree_util.tree_map(jnp.asarray, p) for p in parked)
+        mgr.close()
+
+    # continue steps 3..9 — crosses the phase boundary at step 4
+    mesh = make_host_mesh(1, 1)
+    train = steps.build_train_step(run, mesh)
+    data = LMBatchIterator(cfg.vocab_size, 32, 4, seed=11)
+    it = iter(data)
+    batches = [{k: jnp.asarray(v) for k, v in next(it).items()}
+               for _ in range(2)]
+    cur_phase, fns, losses_b = 0, {}, []
+    for i in range(3, 10):
+        phase = freezing.phase_for_epoch(i // 4, "sequential")
+        if phase != cur_phase:
+            state, parked = steps.repartition_state(run.optim, state, parked,
+                                                    phase)
+            cur_phase = phase
+        if phase not in fns:
+            fns[phase] = jax.jit(functools.partial(train, phase=phase))
+        state, m = fns[phase](state, batches[i % 2])
+        losses_b.append(float(m["loss"]))
+
+    np.testing.assert_allclose(losses_a + losses_b, full_losses, rtol=0,
+                               atol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(full_state.params),
+                    jax.tree_util.tree_leaves(state.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
