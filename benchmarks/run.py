@@ -49,7 +49,7 @@ def main() -> None:
 
     from benchmarks import (fig2_rank_sweep, fig3_freezing_convergence,
                             kernel_microbench, lm_throughput,
-                            table1_resnet_throughput,
+                            serve_throughput, table1_resnet_throughput,
                             table2_decomposition_time, table3_accuracy,
                             table4_vit, train_freezing)
 
@@ -62,6 +62,9 @@ def main() -> None:
         guard("Train freezing: step walltime + live-state bytes "
               "(partitioned state)",
               train_freezing.main, record_as="train_freezing")
+        guard("Serve throughput: Poisson trace, dense vs LRD vs "
+              "rank-quantized export",
+              serve_throughput.main, record_as="serve_throughput")
         _section("summary")
         if failures:
             print(f"FAILED sections: {failures}")
@@ -91,6 +94,9 @@ def main() -> None:
     guard("Train freezing: step walltime + live-state bytes "
           "(partitioned state)",
           train_freezing.main, record_as="train_freezing")
+    guard("Serve throughput: Poisson trace, dense vs LRD vs "
+          "rank-quantized export",
+          serve_throughput.main, record_as="serve_throughput")
     guard("LM train/decode throughput (smoke archs)", lm_throughput.main)
 
     _section("summary")

@@ -1,6 +1,9 @@
-"""Batched serving example: prefill + continuous greedy decode with an
-LRD-compressed model (inference acceleration = rank optimization only,
-exactly as the paper's Table 1 infer column).
+"""Continuous-batching serving example: rank-quantized export + scheduler.
+
+Trains nothing — inits an LRD-compressed model, exports it with serve-time
+rank quantization (Algorithm 1 per layer: truncate to the tile-quantized
+rank, merge layers that don't pay back to dense), then streams requests
+with per-request max_new/eos through the paged-KV scheduler.
 
   PYTHONPATH=src python examples/serve_lm.py
 """
@@ -11,25 +14,40 @@ from repro.configs import get_smoke_config
 from repro.configs.base import DistConfig, LRDConfig, RunConfig, ShapeConfig
 from repro.launch import steps
 from repro.launch.mesh import make_host_mesh
-from repro.serving import ServeEngine
+from repro.serving import ServeEngine, export_for_serving
 
 
 def main():
     cfg = get_smoke_config("qwen2-72b")  # GQA family, reduced dims
-    run = RunConfig(model=cfg, shape=ShapeConfig("serve", 32, 4, "decode"),
+    run = RunConfig(model=cfg, shape=ShapeConfig("serve", 64, 4, "decode"),
                     lrd=LRDConfig(enabled=True, rank_quantize=False, min_dim=16),
                     dist=DistConfig(fsdp=False, remat="none"))
     params, plan = steps.init_params(run)
     print(plan.summary())
+
+    # serve-time rank quantization: the paper's Algorithm 1 against the
+    # machine this example runs on (measured probes)
+    params, report = export_for_serving(params, backend="measured",
+                                        probe_tokens=4)
+    print(report.summary())
+
     mesh = make_host_mesh(1, 1)
-    engine = ServeEngine(run, params, mesh, max_len=64)
+    engine = ServeEngine(run, params, mesh, max_len=64, num_slots=2,
+                         prefill_len=32, block_size=8)
 
     rng = np.random.default_rng(1)
-    prompts = rng.integers(0, cfg.vocab_size, (4, 24), dtype=np.int32)
-    out = engine.generate(prompts, max_new=16)
-    print(f"batch {out.shape[0]} x {out.shape[1]} new tokens")
-    for row in out:
-        print(" ", row.tolist())
+    requests = [{"prompt": rng.integers(0, cfg.vocab_size, int(n), dtype=np.int32),
+                 "max_new": int(m)}
+                for n, m in [(24, 16), (8, 4), (16, 8), (30, 12)]]
+    outs = engine.serve(
+        requests,
+        on_token=lambda req, tok: print(f"  req {req.rid} += {tok}"))
+    for i, row in enumerate(outs):
+        print(f"request {i}: {row.tolist()}")
+    stats = engine.scheduler.latency_stats()
+    print(f"{stats['tok_per_s']:.1f} tok/s, p95 latency "
+          f"{stats['p95_latency_s'] * 1e3:.0f}ms, "
+          f"{engine.scheduler.decode_compiles} serve_step compile")
 
 
 if __name__ == "__main__":

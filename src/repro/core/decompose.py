@@ -29,7 +29,9 @@ import numpy as np
 from repro.core import rank_opt, svd, tucker
 from repro.core.policy import DecompositionPolicy, Rule
 
-__all__ = ["LayerPlan", "DecompositionPlan", "RankResolver", "Decomposer", "apply_lrd"]
+__all__ = ["LayerPlan", "DecompositionPlan", "RankResolver", "Decomposer",
+           "apply_lrd", "iter_factor_groups", "map_factor_groups",
+           "merge_factor_group"]
 
 
 @dataclasses.dataclass
@@ -220,6 +222,68 @@ def _init_dense(key, shape, dtype):
         fan_in = shape[-4] * shape[-3] * shape[-2] if len(shape) == 4 else np.prod(shape[-4:-1])
     scale = 1.0 / np.sqrt(max(fan_in, 1))
     return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Factor-group walkers (serve-time export hooks)
+# ---------------------------------------------------------------------------
+#
+# A *factor group* is a param dict holding an SVD pair ``{"u", "v"}``
+# (optionally ``"bias"``).  These walkers are the tree-surgery layer that
+# ``serving/export.py`` builds on: enumerate groups, rewrite them in place
+# (rank truncation), or merge them back to a dense ``kernel`` — the
+# Algorithm-1 guard applied to an already-trained checkpoint.
+
+def _is_factor_group(tree: Any) -> bool:
+    """The single definition of "SVD factor group" for serve-time tree
+    surgery: a param dict holding exactly the pair ``models.common.linear``
+    dispatches on — ``{u, v}`` plus an optional ``bias``.  Groups carrying
+    extra structure (e.g. the ResNet folded-BN conv groups with
+    ``scale``/``bn_bias``) are deliberately NOT matched: rewriting them
+    with linear-layer semantics would drop the extra leaves."""
+    return (isinstance(tree, dict) and "u" in tree and "v" in tree
+            and not isinstance(tree["u"], dict)
+            and set(tree) <= {"u", "v", "bias"})
+
+
+def iter_factor_groups(params: Any, path: str = ""):
+    """Yield ``(path, group_dict)`` for every SVD factor group in the tree."""
+    if not isinstance(params, dict):
+        return
+    if _is_factor_group(params):
+        yield path, params
+        return
+    for k, v in params.items():
+        yield from iter_factor_groups(v, f"{path}/{k}" if path else k)
+
+
+def map_factor_groups(params: Any, fn) -> Any:
+    """Rebuild the tree with ``fn(path, group) -> new_group`` applied to
+    every factor group (return the group unchanged to keep it).  Leaves and
+    non-factor subtrees pass through untouched."""
+
+    def walk(tree, path):
+        if not isinstance(tree, dict):
+            return tree
+        if _is_factor_group(tree):
+            return fn(path, tree)
+        return {k: walk(v, f"{path}/{k}" if path else k)
+                for k, v in tree.items()}
+
+    return walk(params, "")
+
+
+def merge_factor_group(group: Dict[str, Any]) -> Dict[str, Any]:
+    """Collapse ``{"u", "v"[, "bias"]}`` into ``{"kernel"[, "bias"]}``.
+
+    ``models.common.linear`` dispatches on the key set, so the merged layer
+    runs the single dense matmul from then on (Algorithm-1 rejection)."""
+    u, v = group["u"], group["v"]
+    kernel = jnp.matmul(u.astype(jnp.float32), v.astype(jnp.float32))
+    out = {"kernel": kernel.astype(u.dtype)}
+    if "bias" in group:
+        out["bias"] = group["bias"]
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -30,6 +30,7 @@ __all__ = [
     "svd_compression_ratio",
     "svd_decompose",
     "randomized_svd",
+    "truncate_factors",
     "reconstruction_error",
     "max_rank",
 ]
@@ -119,6 +120,47 @@ def randomized_svd(
     u = q @ ub[:, :rank]
     uf, vf = _split_factors(u, sb[:rank], vtb[:rank, :], balance)
     return uf.astype(w.dtype), vf.astype(w.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("rank", "balance"))
+def _truncate_factors_2d(u: jax.Array, v: jax.Array, rank: int, balance: str):
+    uf, vf = u.astype(jnp.float32), v.astype(jnp.float32)
+    qu, ru = jnp.linalg.qr(uf)  # (C, r) (r, r)
+    qv, rv = jnp.linalg.qr(vf.T)  # (S, r) (r, r)
+    um, sm, vtm = jnp.linalg.svd(ru @ rv.T, full_matrices=False)  # r x r
+    u2, v2 = _split_factors(qu @ um[:, :rank], sm[:rank],
+                            vtm[:rank, :] @ qv.T, balance)
+    return u2, v2
+
+
+def truncate_factors(
+    u: jax.Array, v: jax.Array, rank: int, *, balance: str = "balanced"
+) -> Tuple[jax.Array, jax.Array]:
+    """Optimal rank-``rank`` re-truncation of an existing factor pair.
+
+    Fine-tuning after decomposition leaves ``U @ V`` no longer in SVD form,
+    so serve-time rank quantization (serving/export.py) cannot simply drop
+    trailing columns.  QR on each factor reduces the problem to an r x r
+    SVD — ``U V = Q_u (R_u R_vᵀ) Q_vᵀ`` — giving the Eckart-Young-optimal
+    rank-``rank`` approximation of the product in O(r²(C+S) + r³), never
+    touching a C x S matrix.  Accepts stacked (L, C, r)/(L, r, S) factors.
+    """
+    if rank >= u.shape[-1]:
+        return u, v
+    if u.ndim < 2:
+        raise ValueError(f"truncate_factors expects >= 2-D factors, got {u.shape}")
+    if u.ndim == 2:
+        u2, v2 = _truncate_factors_2d(u, v, rank, balance)
+    else:
+        # arbitrary leading stack dims — (L, C, r), MoE experts (L, E, C, r)
+        lead_u, lead_v = u.shape[:-2], v.shape[:-2]
+        uf = u.reshape((-1,) + u.shape[-2:])
+        vf = v.reshape((-1,) + v.shape[-2:])
+        u2, v2 = jax.vmap(
+            lambda a, b: _truncate_factors_2d(a, b, rank, balance))(uf, vf)
+        u2 = u2.reshape(lead_u + u2.shape[-2:])
+        v2 = v2.reshape(lead_v + v2.shape[-2:])
+    return u2.astype(u.dtype), v2.astype(v.dtype)
 
 
 def reconstruction_error(w: jax.Array, u: jax.Array, v: jax.Array) -> jax.Array:

@@ -1,7 +1,14 @@
-"""Batched serving driver: prefill + greedy decode over the ServeEngine.
+"""Serving driver: continuous batching over a synthetic Poisson trace.
+
+Replays ``--requests`` requests with exponential inter-arrival times at
+``--rate`` req/s (random prompt lengths) through the scheduler-backed
+``ServeEngine`` and prints throughput + latency percentiles.  ``--export``
+serves the rank-quantized Algorithm-1 artifact (serving/export.py);
+families the scheduler doesn't cover (enc-dec, VLM, SSM/hybrid) fall back
+to the legacy fixed-batch path automatically.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
-      --batch 4 --prompt-len 32 --max-new 16
+      --slots 4 --requests 16 --rate 8 --max-new 16
 """
 
 from __future__ import annotations
@@ -19,48 +26,107 @@ from repro.launch.mesh import make_host_mesh
 from repro.serving import ServeEngine
 
 
+def poisson_trace(n: int, rate: float, prompt_len: int, vocab: int,
+                  seed: int = 0):
+    """n requests: exponential inter-arrivals at ``rate``/s, random prompts
+    of 1/4..1x ``prompt_len`` tokens."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / max(rate, 1e-9), n))
+    lens = rng.integers(max(prompt_len // 4, 1), prompt_len + 1, n)
+    return [{"prompt": rng.integers(0, vocab, int(l), dtype=np.int32),
+             "arrival": float(t)} for t, l in zip(arrivals, lens)]
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="Poisson arrival rate, requests/second")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="serving window (default prompt_len + max_new)")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="paged pool size; 0 = fully provisioned")
     ap.add_argument("--lrd", action="store_true")
+    ap.add_argument("--export", choices=("none", "analytic", "measured"),
+                    default="none",
+                    help="serve the rank-quantized Algorithm-1 artifact")
+    ap.add_argument("--eos-id", type=int, default=-1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    shape = ShapeConfig("serve", args.prompt_len, args.batch, "decode")
+    max_len = args.max_len or (args.prompt_len + args.max_new)
+    shape = ShapeConfig("serve", max_len, args.slots, "decode")
     run = RunConfig(model=cfg, shape=shape,
-                    lrd=LRDConfig(enabled=args.lrd, min_dim=16),
+                    lrd=LRDConfig(enabled=args.lrd, min_dim=16,
+                                  rank_quantize=False),
                     dist=DistConfig(fsdp=False, remat="none"))
     mesh = make_host_mesh(1, 1)
-    params, _ = steps_mod.init_params(run)
+    params, plan = steps_mod.init_params(run)
+    if plan.layers:
+        print(plan.summary())
+    if args.export != "none":
+        from repro.serving.export import export_for_serving
+        backend = "measured" if args.export == "measured" else "analytic-tpu"
+        params, report = export_for_serving(params, backend=backend,
+                                            probe_tokens=args.slots)
+        print(report.summary())
 
+    if cfg.family in ("dense", "moe"):
+        engine = ServeEngine(run, params, mesh, max_len=max_len,
+                             num_slots=args.slots,
+                             prefill_len=args.prompt_len,
+                             block_size=args.block_size,
+                             num_blocks=args.num_blocks or None)
+        trace = poisson_trace(args.requests, args.rate, args.prompt_len,
+                              cfg.vocab_size, args.seed)
+        for r in trace:
+            r["max_new"] = args.max_new
+            if args.eos_id >= 0:
+                r["eos_id"] = args.eos_id
+        t0 = time.perf_counter()
+        outs = engine.serve(trace)
+        dt = time.perf_counter() - t0
+        stats = engine.scheduler.latency_stats()
+        print(f"{len(outs)} requests, "
+              f"{int(stats['generated_tokens'])} tokens in {dt:.2f}s "
+              f"({stats['tok_per_s']:.1f} tok/s; layout "
+              f"{engine.scheduler.layout}, "
+              f"{engine.scheduler.decode_compiles} decode compile)")
+        print(f"latency p50 {stats['p50_latency_s'] * 1e3:.0f}ms  "
+              f"p95 {stats['p95_latency_s'] * 1e3:.0f}ms  "
+              f"first-token p50 {stats['p50_first_token_s'] * 1e3:.0f}ms  "
+              f"preemptions {int(stats['preemptions'])}")
+        print("sample:", outs[0][:16].tolist())
+        return outs
+
+    # fixed-batch fallback for extras-carrying / stateful families
     rng = np.random.default_rng(args.seed)
-    prompts = rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len),
-                           dtype=np.int32)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           size=(args.slots, args.prompt_len), dtype=np.int32)
     extras = None
     if cfg.family == "vlm":
         extras = {"vision_embeddings": jax.numpy.asarray(
-            rng.normal(0, 0.1, (args.batch, cfg.num_image_tokens, cfg.d_model)),
+            rng.normal(0, 0.1, (args.slots, cfg.num_image_tokens, cfg.d_model)),
             dtype=cfg.cdtype)}
     if cfg.family == "encdec":
         from repro.models import encdec as ed
         frames = jax.numpy.asarray(
-            rng.normal(0, 0.1, (args.batch, cfg.encoder_frames, cfg.d_model)),
+            rng.normal(0, 0.1, (args.slots, cfg.encoder_frames, cfg.d_model)),
             dtype=cfg.cdtype)
-        memory = ed.encode(params, frames, cfg)
-        extras = {"memory": memory}
-
-    engine = ServeEngine(run, params, mesh, max_len=args.prompt_len + args.max_new)
+        extras = {"memory": ed.encode(params, frames, cfg)}
+    engine = ServeEngine(run, params, mesh, max_len=max_len)
     t0 = time.perf_counter()
     out = engine.generate(prompts, max_new=args.max_new, extras=extras)
     dt = time.perf_counter() - t0
-    total_tokens = out.size
     print(f"generated {out.shape} tokens in {dt:.2f}s "
-          f"({total_tokens / dt:.1f} tok/s incl. compile)")
+          f"({out.size / dt:.1f} tok/s incl. compile; fixed-batch path)")
     print("sample:", out[0][:16].tolist())
     return out
 

@@ -292,7 +292,35 @@ def build_prefill_step(run: RunConfig, mesh):
     return prefill_step
 
 
+def build_slot_prefill_step(run: RunConfig, mesh):
+    """Prefill for the continuous-batching scheduler (DESIGN.md §8).
+
+    Like :func:`build_prefill_step` but takes ``last_pos`` — the index of
+    each row's final *real* prompt token — so prompts padded to the
+    engine's fixed prefill length still hand back the logits the first
+    generated token must be sampled from.  One compile per prefill shape.
+    """
+
+    def slot_prefill_step(params, batch, last_pos):
+        act = ACT_RULES_SP if run.dist.sequence_parallel else ACT_RULES
+        with axis_rules(mesh, act=act, params=_param_rules(run)):
+            logits, cache, _, _ = _forward_full(params, batch, run)
+            idx = jnp.asarray(last_pos, jnp.int32).reshape(-1)
+            last = logits[jnp.arange(logits.shape[0]), idx]
+            return last, cache
+
+    return slot_prefill_step
+
+
 def build_serve_step(run: RunConfig, mesh):
+    """One decode step for the whole engine lifetime.
+
+    ``pos`` may be a scalar (legacy fixed-batch decode) or a (B,) vector of
+    per-slot positions (continuous batching): the models' decode paths
+    write each row's KV at its own offset, build per-row RoPE tables, and
+    mask per-row lengths, so slot recycling never changes a shape and the
+    step compiles exactly once (serving/scheduler.py asserts this).
+    """
     cfg = run.model
 
     def serve_step(params, cache, token, pos, extras=None):

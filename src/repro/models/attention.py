@@ -154,6 +154,102 @@ def _flash_path(q, k, v, cfg: ModelConfig, *, causal: bool):
 
 
 # --------------------------------------------------------------------------
+# Decode-cache addressing (contiguous slots + paged blocks)
+# --------------------------------------------------------------------------
+
+def _row_positions(pos, batch: int):
+    """Normalize ``pos`` to (per_row (B,) int32 or None, scalar start).
+
+    Scalar ``pos`` keeps the legacy fixed-batch semantics (every row writes
+    at the same offset); a (B,) vector means slot-indexed continuous decode
+    where each batch row sits at its own sequence position.
+    """
+    pos_arr = jnp.asarray(pos)
+    if pos_arr.ndim >= 1 and pos_arr.size == batch and batch > 1:
+        return pos_arr.reshape(-1).astype(jnp.int32), None
+    flat = pos_arr.reshape(-1)
+    return None, (flat[0] if flat.size else pos_arr).astype(jnp.int32)
+
+
+def _update_rows(cache_leaf: jax.Array, new: jax.Array, rows) -> jax.Array:
+    """Write one decode step (B, 1, ...) into (B, S, ...) at per-row offsets."""
+    zeros = (0,) * (cache_leaf.ndim - 2)
+    return jax.vmap(
+        lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (p,) + zeros)
+    )(cache_leaf, new.astype(cache_leaf.dtype), rows)
+
+
+def _paged_write(pool: jax.Array, new: jax.Array, phys: jax.Array) -> jax.Array:
+    """Scatter one decode step into the block pool.
+
+    pool: (num_blocks, block_size, ...); new: (B, 1, ...); phys: (B,) flat
+    physical positions (block_id * block_size + offset).  Distinct slots own
+    distinct blocks, so indices never collide; retired slots point at the
+    reserved sink block 0 (serving/paged_cache.py) and their writes land
+    there harmlessly.
+    """
+    nb, bs = pool.shape[0], pool.shape[1]
+    flat = pool.reshape((nb * bs,) + pool.shape[2:])
+    flat = flat.at[phys].set(new[:, 0].astype(pool.dtype))
+    return flat.reshape(pool.shape)
+
+
+def _paged_gather(pool: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Gather every slot's logical view from the block pool.
+
+    pool: (num_blocks, block_size, ...); page_table: (B, max_blocks) int32
+    -> (B, max_blocks * block_size, ...).  Positions beyond a slot's length
+    read whatever sits in its tail blocks (or the sink block); attention
+    masks them via ``kv_len`` exactly like contiguous-cache padding.
+    """
+    nb, bs = pool.shape[0], pool.shape[1]
+    flat = pool.reshape((nb * bs,) + pool.shape[2:])
+    b, mb = page_table.shape
+    phys = (page_table[:, :, None] * bs
+            + jnp.arange(bs, dtype=page_table.dtype)[None, None, :])
+    return flat[phys.reshape(b, mb * bs)]
+
+
+def _gqa_paged_update(cache: Params, k_new, v_new, rows) -> Tuple[Params, jax.Array, jax.Array]:
+    """Write this step's k/v into the paged pool and gather per-slot views.
+
+    cache: {"k","v"[, "k_scale","v_scale"], "page_table"} with pools shaped
+    (num_blocks, block_size, KV, hd) and page_table (B, max_blocks).
+    Returns (new_cache, k_view, v_view) where the views are (B, Lmax, KV, *)
+    logical per-slot caches (dequantized when the pool is int8).
+    """
+    pt = cache["page_table"]
+    bs = cache["k"].shape[1]
+    phys = pt[jnp.arange(pt.shape[0]), rows // bs] * bs + rows % bs
+    if "k_scale" in cache:
+        from repro.models import kvcache as kvq
+        kq, ks = kvq.quantize_kv(k_new)
+        vq, vs = kvq.quantize_kv(v_new)
+        new_cache = {
+            "k": _paged_write(cache["k"], kq, phys),
+            "v": _paged_write(cache["v"], vq, phys),
+            "k_scale": _paged_write(cache["k_scale"], ks, phys),
+            "v_scale": _paged_write(cache["v_scale"], vs, phys),
+            "page_table": pt,
+        }
+        k_view = kvq.dequantize_kv(_paged_gather(new_cache["k"], pt),
+                                   _paged_gather(new_cache["k_scale"], pt),
+                                   k_new.dtype)
+        v_view = kvq.dequantize_kv(_paged_gather(new_cache["v"], pt),
+                                   _paged_gather(new_cache["v_scale"], pt),
+                                   v_new.dtype)
+    else:
+        new_cache = {
+            "k": _paged_write(cache["k"], k_new, phys),
+            "v": _paged_write(cache["v"], v_new, phys),
+            "page_table": pt,
+        }
+        k_view = _paged_gather(new_cache["k"], pt).astype(k_new.dtype)
+        v_view = _paged_gather(new_cache["v"], pt).astype(v_new.dtype)
+    return new_cache, k_view, v_view
+
+
+# --------------------------------------------------------------------------
 # GQA
 # --------------------------------------------------------------------------
 
@@ -236,11 +332,17 @@ def gqa_apply(
         else:
             q, k_new, v_new = _project_qkv(p, x, None, cfg, rope, use_pallas=use_pallas)
             pos_arr = jnp.asarray(pos)
-            start = (pos_arr if pos_arr.ndim == 0 else pos_arr[0]).astype(jnp.int32)
             length = (pos_arr + 1).astype(jnp.int32).reshape(-1)
-            if "k_scale" in cache:  # int8-quantized cache (§Perf C2)
+            rows, start = _row_positions(pos, b)
+            if "page_table" in cache:  # paged block pool (DESIGN.md §8)
+                if rows is None:
+                    rows = jnp.broadcast_to(start, (b,))
+                new_cache, k_cache, v_cache = _gqa_paged_update(
+                    cache, k_new, v_new, rows)
+            elif "k_scale" in cache:  # int8-quantized cache (§Perf C2)
                 from repro.models import kvcache as kvq
-                new_cache = kvq.update_quantized_kv(cache, k_new, v_new, start)
+                new_cache = kvq.update_quantized_kv(
+                    cache, k_new, v_new, rows if rows is not None else start)
                 new_cache = {kk: shard(vv, "batch", "kv_seq", "kv_heads", None)
                              for kk, vv in new_cache.items()}
                 k_cache = kvq.dequantize_kv(new_cache["k"], new_cache["k_scale"],
@@ -248,10 +350,14 @@ def gqa_apply(
                 v_cache = kvq.dequantize_kv(new_cache["v"], new_cache["v_scale"],
                                             x.dtype)
             else:
-                k_cache = jax.lax.dynamic_update_slice(
-                    cache["k"], k_new.astype(cache["k"].dtype), (0, start, 0, 0))
-                v_cache = jax.lax.dynamic_update_slice(
-                    cache["v"], v_new.astype(cache["v"].dtype), (0, start, 0, 0))
+                if rows is not None:  # slot-indexed: per-row write offsets
+                    k_cache = _update_rows(cache["k"], k_new, rows)
+                    v_cache = _update_rows(cache["v"], v_new, rows)
+                else:
+                    k_cache = jax.lax.dynamic_update_slice(
+                        cache["k"], k_new.astype(cache["k"].dtype), (0, start, 0, 0))
+                    v_cache = jax.lax.dynamic_update_slice(
+                        cache["v"], v_new.astype(cache["v"].dtype), (0, start, 0, 0))
                 k_cache = shard(k_cache, "batch", "kv_seq", "kv_heads", None)
                 v_cache = shard(v_cache, "batch", "kv_seq", "kv_heads", None)
                 new_cache = {"k": k_cache, "v": v_cache}
@@ -343,11 +449,15 @@ def mla_apply(
         # Absorbed decode: score in latent space, never materialize per-head K/V.
         assert cache is not None and pos is not None
         pos_arr = jnp.asarray(pos)
-        start = (pos_arr if pos_arr.ndim == 0 else pos_arr[0]).astype(jnp.int32)
-        ckv_cache = jax.lax.dynamic_update_slice(
-            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, start, 0))
-        kr_cache = jax.lax.dynamic_update_slice(
-            cache["kr"], k_rope[:, :, 0, :].astype(cache["kr"].dtype), (0, start, 0))
+        rows, start = _row_positions(pos, b)
+        if rows is not None:  # slot-indexed continuous decode (DESIGN.md §8)
+            ckv_cache = _update_rows(cache["ckv"], ckv, rows)
+            kr_cache = _update_rows(cache["kr"], k_rope[:, :, 0, :], rows)
+        else:
+            ckv_cache = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, start, 0))
+            kr_cache = jax.lax.dynamic_update_slice(
+                cache["kr"], k_rope[:, :, 0, :].astype(cache["kr"].dtype), (0, start, 0))
         ckv_cache = shard(ckv_cache, "batch", "kv_seq", None)
         w_kv = p["kv_up"]["kernel"] if "kernel" in p["kv_up"] else (
             jnp.dot(p["kv_up"]["u"], p["kv_up"]["v"]))

@@ -46,10 +46,26 @@ def init_quantized_kv(stack: Tuple[int, ...], batch: int, length: int,
 
 def update_quantized_kv(cache: dict, k_new: jax.Array, v_new: jax.Array,
                         start) -> dict:
-    """Write one step's k/v (B, 1, KV, hd) at position ``start``."""
+    """Write one step's k/v (B, 1, KV, hd) at position ``start``.
+
+    ``start`` is either a scalar (all rows share one position — fixed-batch
+    decode) or a (B,) vector of per-row positions (slot-indexed continuous
+    decode, serving/scheduler.py): each batch row writes at its own offset.
+    """
     kq, ks = quantize_kv(k_new)
     vq, vs = quantize_kv(v_new)
-    at = (0, start, 0, 0)
+    start = jnp.asarray(start)
+    if start.ndim >= 1 and start.size > 1:
+        upd = jax.vmap(
+            lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (p, 0, 0)))
+        pos = start.reshape(-1).astype(jnp.int32)
+        return {
+            "k": upd(cache["k"], kq, pos),
+            "v": upd(cache["v"], vq, pos),
+            "k_scale": upd(cache["k_scale"], ks, pos),
+            "v_scale": upd(cache["v_scale"], vs, pos),
+        }
+    at = (0, start.reshape(()), 0, 0)
     return {
         "k": jax.lax.dynamic_update_slice(cache["k"], kq, at),
         "v": jax.lax.dynamic_update_slice(cache["v"], vq, at),

@@ -328,8 +328,15 @@ def _make_rope(cfg: ModelConfig, s: int, mode: str, pos):
     if mode == "full":
         cos, sin = rope_table(s, hd, cfg.rope_theta)
     else:
-        positions = (jnp.asarray(pos).reshape(-1)[:1] + jnp.arange(1))
-        cos, sin = rope_table(1, hd, cfg.rope_theta, positions=positions)
+        pos_arr = jnp.asarray(pos).reshape(-1)
+        if pos_arr.size > 1:
+            # Slot-indexed decode: each batch row sits at its own position,
+            # so the tables are (B, 1, hd/2) — apply_rope broadcasts per row.
+            cos, sin = rope_table(1, hd, cfg.rope_theta,
+                                  positions=pos_arr[:, None])
+        else:
+            cos, sin = rope_table(1, hd, cfg.rope_theta,
+                                  positions=pos_arr[:1] + jnp.arange(1))
     return (cos, sin)
 
 

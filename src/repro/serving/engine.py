@@ -1,16 +1,29 @@
-"""Batched serving engine: prefill + slot-based continuous decode.
+"""Serving engine: continuous batching over the scheduler, with a legacy
+fixed-batch path for families the scheduler doesn't cover.
+
+``ServeEngine`` is the user-facing facade (DESIGN.md §8).  With
+``num_slots > 0`` and a decoder-only LM it owns one
+:class:`repro.serving.scheduler.Scheduler` — admission queue, paged KV
+cache, per-request eos/max-new, streaming callbacks, and exactly one
+compiled ``serve_step`` for the engine lifetime.  ``generate`` keeps its
+original batch signature on top of it; ``serve`` exposes per-request
+results and trace replay.
+
+The legacy fixed-batch path (``extras``-carrying families: enc-dec memory,
+VLM vision embeddings; or ``num_slots == 0``) prefills the whole batch at
+once and decodes lock-step.  Finished rows there are masked to ``eos_id``
+in the output — the batch still steps until all rows finish, which is
+exactly the head-of-line blocking the scheduler exists to remove.
 
 ``pad_cache`` grows a prefill cache (kv_seq sized to the prompt) to the
-serving window; ``ServeEngine`` runs greedy batched decode with per-request
-slots (a request finishing frees its slot for the next queued prompt —
-continuous-batching lite; per-slot position tracking keeps one compiled
-serve_step for the whole lifetime).
+serving window; int8 caches pad their per-position scale leaves alongside
+the values.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -19,8 +32,12 @@ import numpy as np
 from repro.configs.base import RunConfig
 from repro.launch import steps as steps_mod
 
-# leaf name -> axis that indexes kv positions (None = stateful, no padding)
-_SEQ_AXIS = {"k": -3, "v": -3, "ckv": -2, "kr": -2}
+# leaf name -> axis that indexes kv positions (None = stateful, no padding).
+# k_scale/v_scale are the int8 cache's per-(batch, position, head) scales —
+# they share k/v's kv_seq axis (models/kvcache.init_quantized_kv layout);
+# omitting them desynchronizes value/scale lengths after padding.
+_SEQ_AXIS = {"k": -3, "v": -3, "k_scale": -3, "v_scale": -3,
+             "ckv": -2, "kr": -2}
 
 
 def pad_cache(cache: Any, target_len: int, skip: Optional[set] = None) -> Any:
@@ -61,19 +78,98 @@ def pad_cache_preserving_cross(cache: Any, target_len: int) -> Any:
 
 @dataclasses.dataclass
 class ServeEngine:
+    """Facade over the scheduler (continuous) / fixed-batch (legacy) paths.
+
+    ``num_slots > 0`` enables the scheduler for decoder-only LM families
+    (dense/moe): ``generate`` routes through it and ``serve`` exposes
+    per-request submission.  ``num_slots == 0`` (default) keeps the legacy
+    fixed-batch behaviour everywhere.
+    """
+
     run: RunConfig
     params: Any
     mesh: Any
     max_len: int = 256
+    num_slots: int = 0
+    prefill_len: Optional[int] = None
+    block_size: int = 16
+    num_blocks: Optional[int] = None
 
     def __post_init__(self):
         self._prefill = jax.jit(steps_mod.build_prefill_step(self.run, self.mesh))
         self._step = jax.jit(steps_mod.build_serve_step(self.run, self.mesh))
+        self._scheduler = None
+
+    # -- continuous-batching path -----------------------------------------
+
+    @property
+    def scheduler(self):
+        """The engine's (lazily built, lifetime-shared) scheduler."""
+        if self._scheduler is None:
+            from repro.serving.scheduler import Scheduler
+            self._scheduler = Scheduler(
+                self.run, self.params, self.mesh,
+                num_slots=self.num_slots, max_len=self.max_len,
+                prefill_len=self.prefill_len, block_size=self.block_size,
+                num_blocks=self.num_blocks)
+        return self._scheduler
+
+    def _scheduler_usable(self, extras, prompt_len=0, max_new=0) -> bool:
+        # prompts must fit the scheduler's fixed prefill/window shapes;
+        # oversized batches keep the legacy fixed-batch behaviour
+        eff_prefill = min(self.prefill_len or self.max_len, self.max_len)
+        return (self.num_slots > 0 and extras is None
+                and self.run.model.family in ("dense", "moe")
+                and 0 < prompt_len <= eff_prefill
+                and prompt_len + max_new <= self.max_len)
+
+    def serve(self, requests: Sequence[Dict[str, Any]],
+              on_token=None) -> List[np.ndarray]:
+        """Submit request dicts, drain the scheduler, return per-request
+        tokens in submission order.
+
+        Each request: ``{"prompt": 1-D int tokens, "max_new": int,
+        "eos_id": Optional[int], "arrival": float virtual seconds}`` (only
+        ``prompt`` required).  Streaming: ``on_token(request, token)`` fires
+        per generated token.  ``engine.scheduler.latency_stats()`` has the
+        trace's latency/throughput percentiles afterwards.
+        """
+        sched = self.scheduler
+        sched.on_token = on_token
+        if not sched.has_work():
+            # fresh trace: per-call latency stats, re-anchored clock
+            sched.reset_stats()
+        rids = [sched.submit(np.asarray(r["prompt"], np.int32),
+                             max_new=int(r.get("max_new", 32)),
+                             eos_id=r.get("eos_id"),
+                             arrival=float(r.get("arrival", 0.0)))
+                for r in requests]
+        out = sched.run()
+        return [out[r] for r in rids]
+
+    # -- batch generate (scheduler-backed when possible) -------------------
 
     def generate(self, tokens: np.ndarray, max_new: int = 32,
                  extras: Optional[Dict[str, Any]] = None,
                  eos_id: Optional[int] = None) -> np.ndarray:
-        """Greedy batched generation. tokens: (B, prompt_len) int32."""
+        """Greedy batched generation. tokens: (B, prompt_len) int32.
+
+        Returns (B, n) generated tokens, n <= max_new; rows that finished
+        early are padded/masked with ``eos_id``.
+        """
+        if self._scheduler_usable(extras, tokens.shape[1], max_new):
+            outs = self.serve([{"prompt": row, "max_new": max_new,
+                                "eos_id": eos_id} for row in tokens])
+            n = max(len(o) for o in outs)
+            fill = eos_id if eos_id is not None else 0
+            arr = np.full((len(outs), n), fill, np.int32)
+            for i, o in enumerate(outs):
+                arr[i, :len(o)] = o
+            return arr
+        return self._generate_fixed(tokens, max_new, extras, eos_id)
+
+    def _generate_fixed(self, tokens, max_new, extras, eos_id) -> np.ndarray:
+        """Legacy lock-step decode (enc-dec/VLM extras, or num_slots=0)."""
         b, t = tokens.shape
         batch = {"tokens": jnp.asarray(tokens),
                  "labels": jnp.zeros_like(jnp.asarray(tokens))}
@@ -81,17 +177,24 @@ class ServeEngine:
             batch.update(extras)
         last_logits, cache = self._prefill(self.params, batch)
         cache = pad_cache_preserving_cross(cache, t + max_new)
-        out = [np.asarray(jnp.argmax(last_logits, axis=-1))[:, None]]
-        token = jnp.argmax(last_logits, axis=-1)[:, None].astype(jnp.int32)
+        tk = np.asarray(jnp.argmax(last_logits, axis=-1))[:, None]
+        out = [tk.astype(np.int32)]
         done = np.zeros((b,), bool)
+        if eos_id is not None:
+            done |= (tk[:, 0] == eos_id)
+        token = jnp.asarray(tk, jnp.int32)
         for i in range(max_new - 1):
+            if done.all():
+                break
             pos = jnp.asarray(t + i, jnp.int32)
             _, cache, token = self._step(self.params, cache, token, pos,
                                          extras or None)
             tk = np.asarray(token)
-            out.append(tk)
+            if eos_id is not None:
+                # rows that finished on an earlier step emit eos_id, not
+                # whatever the still-running batch decodes for them
+                tk = np.where(done[:, None], eos_id, tk)
+            out.append(tk.astype(np.int32))
             if eos_id is not None:
                 done |= (tk[:, 0] == eos_id)
-                if done.all():
-                    break
         return np.concatenate(out, axis=1)

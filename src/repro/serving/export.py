@@ -1,0 +1,152 @@
+"""Serve-time export: Algorithm 1 applied to a *trained* checkpoint.
+
+Training may run at the Eq.-5 rank (or with rank quantization off); serving
+wants the paper's rank-quantized artifact — that is where the claimed
+inference acceleration lives.  ``export_for_serving`` walks every SVD
+factor group of a trained param tree (``core.decompose.iter_factor_groups``)
+and re-runs Algorithm 1 per layer geometry:
+
+* sweep ``t(r)`` over ``[R_min, r_train]`` (``core.rank_opt.optimize_rank``)
+  and pick the rank under the largest step-time cliff, snapped to the MXU
+  tile (``quantize_rank``);
+* **truncate** the trained factors to that rank with the QR-reduced
+  Eckart-Young truncation (``core.svd.truncate_factors``) — fine-tuned
+  factors are no longer in SVD form, so naive column-dropping would be
+  suboptimal;
+* apply the Algorithm-1 **guard**: when even the optimized rank is no
+  faster than the dense layer, merge ``U @ V`` back to a dense ``kernel``
+  (``core.decompose.merge_factor_group``) — the served model keeps only
+  decompositions that pay for themselves.
+
+Backends mirror ``core.rank_opt``: ``analytic-tpu`` (deterministic v5e
+roofline, tile-quantized) or ``measured`` (wall-clock probes on the serving
+host — the paper's own platform-agnostic method, and the right choice when
+exporting for the machine the engine runs on).
+
+The exported tree is a plain param pytree: it round-trips through
+``checkpoint/store.py`` unchanged and drops into ``ServeEngine`` /
+``Scheduler`` like any other checkpoint (tests/test_export.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core import rank_opt, svd
+from repro.core.decompose import map_factor_groups, merge_factor_group
+
+__all__ = ["LayerExport", "ExportReport", "export_for_serving"]
+
+
+@dataclasses.dataclass
+class LayerExport:
+    """Algorithm-1 outcome for one served layer (or stacked layer group)."""
+
+    path: str
+    shape: Tuple[int, int]  # (C, S)
+    rank_train: int
+    rank_serve: int  # == rank_train when no truncation won
+    merged: bool  # Algorithm-1 guard: True -> served dense
+    original_time: float
+    decomposed_time: float
+
+    @property
+    def speedup(self) -> float:
+        return self.original_time / max(self.decomposed_time, 1e-30)
+
+
+@dataclasses.dataclass
+class ExportReport:
+    backend: str
+    layers: Dict[str, LayerExport] = dataclasses.field(default_factory=dict)
+
+    def summary(self) -> str:
+        n = len(self.layers)
+        merged = sum(1 for l in self.layers.values() if l.merged)
+        trunc = sum(1 for l in self.layers.values()
+                    if not l.merged and l.rank_serve < l.rank_train)
+        return (f"export[{self.backend}]: {n} factor groups — {merged} "
+                f"merged dense (guard), {trunc} rank-truncated, "
+                f"{n - merged - trunc} kept")
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {p: dataclasses.asdict(l) for p, l in self.layers.items()},
+            indent=1)
+
+
+def _decide(c: int, s: int, r_train: int, *, backend: str, hw, probe_tokens,
+            stride: int, cache: Dict, measured_dtype) -> rank_opt.RankDecision:
+    """One Algorithm-1 sweep per distinct (C, S, r_train) geometry."""
+    key = (c, s, r_train)
+    if key in cache:
+        return cache[key]
+    alpha = svd.svd_compression_ratio(c, s, r_train)
+    time_fn = None
+    if backend == "measured":
+        time_fn = rank_opt.measured_linear_time_fn(
+            c, s, m=probe_tokens, dtype=measured_dtype)
+    dec = rank_opt.optimize_rank(
+        c, s, alpha=alpha, m=probe_tokens, backend=backend, hw=hw,
+        time_fn=time_fn, stride=stride)
+    cache[key] = dec
+    return dec
+
+
+def export_for_serving(
+    params: Any,
+    *,
+    backend: str = "analytic-tpu",
+    hw: rank_opt.HardwareModel = rank_opt.TPU_V5E,
+    probe_tokens: int = 256,
+    quantize_mode: str = "floor",
+    stride: int = 1,
+    min_rank: int = 1,
+    measured_dtype=None,
+) -> Tuple[Any, ExportReport]:
+    """Rank-quantize a trained param tree for serving.
+
+    Returns ``(new_params, report)``.  ``probe_tokens`` should approximate
+    the serve-step token batch (num_slots for decode); ``stride > 1``
+    shortens measured sweeps the way Table 2 bounds decomposition time.
+    Only pure ``{u, v[, bias]}`` linear groups are rewritten — dense
+    kernels, Tucker conv groups, folded-BN conv groups, norms, and
+    embeddings pass through untouched, and expert-stacked groups truncate
+    but never merge (see ``rewrite``).
+    """
+    report = ExportReport(backend=backend)
+    cache: Dict = {}
+
+    def rewrite(path: str, group: Dict[str, Any]) -> Dict[str, Any]:
+        u, v = group["u"], group["v"]
+        c, r_train, s = int(u.shape[-2]), int(u.shape[-1]), int(v.shape[-1])
+        dec = _decide(c, s, r_train, backend=backend, hw=hw,
+                      probe_tokens=probe_tokens, stride=stride, cache=cache,
+                      measured_dtype=measured_dtype)
+        r_serve = rank_opt.quantize_rank(dec.rank, tile=hw.mxu_tile,
+                                         mode=quantize_mode)
+        r_serve = max(min_rank, min(r_serve, r_train))
+        # Expert-stacked groups (>= 4-D: (L, E, C, r)) are never merged:
+        # the EP MoE path feeds gate/up/down into one shard_map with a
+        # uniform layout, so a per-matrix merge would mix dense and
+        # factorized experts inside a layer; the per-matmul probe also
+        # misrepresents the grouped-einsum dispatch they actually run.
+        mergeable = u.ndim <= 3
+        merged = mergeable and not dec.use_decomposed
+        report.layers[path] = LayerExport(
+            path=path, shape=(c, s), rank_train=r_train, rank_serve=r_serve,
+            merged=merged,
+            original_time=dec.original_time,
+            decomposed_time=dec.decomposed_time)
+        if merged:  # Algorithm-1 guard: serve dense
+            return merge_factor_group(group)
+        if not dec.use_decomposed or r_serve >= r_train:
+            return group
+        u2, v2 = svd.truncate_factors(u, v, r_serve)
+        out = dict(group)
+        out["u"], out["v"] = u2, v2
+        return out
+
+    return map_factor_groups(params, rewrite), report

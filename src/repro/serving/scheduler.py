@@ -1,0 +1,385 @@
+"""Continuous-batching scheduler: admission queue, slots, one compiled step.
+
+The serving subsystem's control plane (DESIGN.md §8).  Requests enter a
+FIFO admission queue; ``num_slots`` decode slots run as one fixed-shape
+batch.  A free slot triggers **prefill-on-free-slot**: the head-of-queue
+request is prefilled (batch-1, padded to ``prefill_len``), its KV inserted
+into the slot's pages, and from the next step on it decodes alongside the
+other slots.  A request retires the moment it emits ``eos_id`` or reaches
+its ``max_new`` — the slot and its cache blocks free immediately and the
+next queued request takes them mid-decode.
+
+Shape discipline is the whole design: prefill, insert, and decode each
+compile **once** for the engine lifetime (``decode_compiles`` asserts it) —
+per-slot positions, per-row RoPE, and page-table indirection make request
+churn invisible to XLA.  Host-side bookkeeping (queue, slot states, block
+allocator) is plain Python/numpy and never enters a trace.
+
+Cache layouts (serving/paged_cache.py):
+
+* ``paged`` — dense/moe GQA families: block pool + page tables, slot memory
+  bounded by actual length, pool oversubscribable.  When a growth
+  allocation fails, the youngest slot is **preempted** — its request goes
+  back to the queue front carrying its generated tokens and resumes later
+  by re-prefilling prompt+generated (greedy decode makes this exact).
+* ``slots`` — MLA latent caches (already rank-compressed): each slot owns
+  one row of a contiguous cache; no allocator, no preemption.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import RunConfig
+from repro.launch import steps as steps_mod
+from repro.serving import paged_cache as pc
+
+__all__ = ["Request", "Scheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its lifecycle record."""
+
+    rid: int
+    prompt: np.ndarray  # (prompt_len,) int32
+    max_new: int
+    eos_id: Optional[int]
+    arrival: float = 0.0  # virtual seconds from run start (trace replay)
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    t_first: Optional[float] = None  # first-token latency anchor
+    t_done: Optional[float] = None
+    preemptions: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.t_done is not None
+
+    def fed_tokens(self) -> np.ndarray:
+        """Tokens whose KV must exist before the pending token is fed:
+        the prompt plus all generated-but-last (the last generated token is
+        the one the next decode step consumes)."""
+        if not self.tokens:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.tokens[:-1], np.int32)])
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos: int = 0  # logical position the next decode step writes at
+    token: int = 0  # pending token (last generated, not yet fed)
+    admitted_at: int = 0  # admission counter, for youngest-first preemption
+
+    @property
+    def active(self) -> bool:
+        return self.req is not None
+
+
+class Scheduler:
+    """Admission queue + slot table + the three compiled steps.
+
+    Parameters
+    ----------
+    num_slots     : decode batch width (fixed for the engine lifetime).
+    max_len       : serving window — prompt_len + max_new must fit.
+    prefill_len   : fixed padded prompt length (<= max_len); also the
+                    re-prefill budget for preemption resume.
+    block_size    : paged layout block width (positions per block).
+    num_blocks    : physical pool size incl. the reserved sink block;
+                    default fully provisions num_slots * max_len (set it
+                    lower to oversubscribe and exercise preemption).
+    on_token      : optional streaming callback ``(request, token)`` fired
+                    per generated token.
+    """
+
+    def __init__(self, run: RunConfig, params: Any, mesh, *,
+                 num_slots: int = 4, max_len: int = 256,
+                 prefill_len: Optional[int] = None, block_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 on_token: Optional[Callable[[Request, int], None]] = None):
+        cfg = run.model
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                f"Scheduler supports decoder-only LM families (dense/moe), "
+                f"not {cfg.family!r}; use ServeEngine.generate's fixed-batch "
+                f"path for encdec/vlm/ssm/hybrid")
+        self.run_config = run
+        self.params = params
+        self.mesh = mesh
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.prefill_len = min(prefill_len or max_len, max_len)
+        self.on_token = on_token
+
+        self.layout = "paged" if pc.supports_paged(cfg) else "slots"
+        if self.layout == "paged":
+            self.block_size = block_size
+            max_blocks = pc.blocks_for(max_len, block_size)
+            if num_blocks is None:
+                num_blocks = 1 + num_slots * max_blocks
+            self.pages = pc.PageTableManager(num_slots, max_blocks,
+                                             num_blocks, block_size)
+            self.cache = pc.init_paged_cache(cfg, num_slots, num_blocks,
+                                             block_size, max_blocks)
+            # the cache operand is donated: the pool updates in place
+            # instead of double-buffering (2x the KV memory the paged
+            # design exists to bound)
+            self._insert = jax.jit(pc.insert_prefill_paged,
+                                   donate_argnums=(0,))
+        else:
+            self.pages = None
+            self.cache = pc.init_slot_cache(cfg, num_slots, max_len)
+            self._insert = jax.jit(pc.insert_prefill_rows,
+                                   donate_argnums=(0,))
+
+        self._prefill = jax.jit(steps_mod.build_slot_prefill_step(run, mesh))
+        self._decode = jax.jit(steps_mod.build_serve_step(run, mesh),
+                               donate_argnums=(1,))
+
+        self.queue: Deque[Request] = deque()
+        self.slots = [_Slot() for _ in range(num_slots)]
+        self.finished: Dict[int, Request] = {}
+        self._rid = 0
+        self._admit_seq = 0
+        self._t0: Optional[float] = None
+        self._positions = np.zeros((num_slots,), np.int32)
+        self._tokens = np.zeros((num_slots, 1), np.int32)
+        self._pt_version = -1  # last page-table version shipped to device
+
+    # -- metrics -----------------------------------------------------------
+
+    @property
+    def decode_compiles(self) -> int:
+        """Compiled serve_step executables — the contract is exactly 1."""
+        return self._decode._cache_size()
+
+    @property
+    def prefill_compiles(self) -> int:
+        return self._prefill._cache_size()
+
+    def cache_bytes(self) -> int:
+        return pc.paged_pool_bytes(self.cache) if self.layout == "paged" \
+            else sum(x.size * x.dtype.itemsize
+                     for x in jax.tree_util.tree_leaves(self.cache))
+
+    # -- submission --------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new: int = 32,
+               eos_id: Optional[int] = None, arrival: float = 0.0) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0 or prompt.size > self.prefill_len:
+            raise ValueError(
+                f"prompt length {prompt.size} outside (0, prefill_len="
+                f"{self.prefill_len}]")
+        if prompt.size + max_new > self.max_len:
+            raise ValueError(
+                f"prompt {prompt.size} + max_new {max_new} exceeds "
+                f"max_len {self.max_len}")
+        req = Request(self._rid, prompt, max_new, eos_id, arrival=arrival)
+        self._rid += 1
+        self.queue.append(req)
+        return req.rid
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s.active for s in self.slots)
+
+    # -- internals ---------------------------------------------------------
+
+    def _now(self) -> float:
+        if self._t0 is None:
+            self._t0 = time.monotonic()
+        return time.monotonic() - self._t0
+
+    def _emit(self, slot: _Slot, tok: int) -> None:
+        req = slot.req
+        req.tokens.append(tok)
+        if req.t_first is None:
+            req.t_first = self._now()
+        if self.on_token is not None:
+            self.on_token(req, tok)
+        if (req.eos_id is not None and tok == req.eos_id) \
+                or len(req.tokens) >= req.max_new:
+            self._retire(slot)
+        else:
+            slot.token = tok
+
+    def _retire(self, slot: _Slot) -> None:
+        slot.req.t_done = self._now()
+        self.finished[slot.req.rid] = slot.req
+        self._release(slot)
+
+    def _release(self, slot: _Slot) -> None:
+        idx = next(i for i, s in enumerate(self.slots) if s is slot)
+        if self.pages is not None:
+            self.pages.release(idx)
+        slot.req = None
+        slot.pos = 0
+        self._positions[idx] = 0
+        self._tokens[idx, 0] = 0
+
+    def _preemptable(self, slot: _Slot) -> bool:
+        """Resume needs a re-prefill of prompt+generated[:-1] — possible
+        only while that still fits the fixed prefill shape."""
+        req = slot.req
+        return (req.prompt.size + max(len(req.tokens) - 1, 0)
+                <= self.prefill_len)
+
+    def _preempt(self, slot: _Slot) -> None:
+        """Push a running request back to the queue front; it resumes by
+        re-prefilling prompt+generated (exact under greedy decode)."""
+        slot.req.preemptions += 1
+        self.queue.appendleft(slot.req)
+        self._release(slot)
+
+    def _admit(self, now: float) -> None:
+        for idx, slot in enumerate(self.slots):
+            if slot.active or not self.queue:
+                continue
+            req = self.queue[0]
+            if req.arrival > now:
+                break  # FIFO: later arrivals wait behind the head
+            fed = req.fed_tokens()
+            # +1 covers the first decode write, so a fresh admission always
+            # makes at least one token of progress before it can be
+            # preempted again (no admit/preempt livelock on a dry pool).
+            if self.pages is not None \
+                    and not self.pages.admit(idx, fed.size + 1):
+                if not any(s.active for s in self.slots):
+                    # blocks are held by active slots only, so with none
+                    # active the pool is as free as it will ever be — the
+                    # head request can never be served
+                    raise RuntimeError(
+                        f"request {req.rid} needs "
+                        f"{pc.blocks_for(fed.size + 1, self.block_size)} "
+                        f"blocks but the pool has "
+                        f"{self.pages.allocator.free_blocks} free at idle "
+                        f"— raise num_blocks")
+                break  # no pages — wait for a retirement
+            self.queue.popleft()
+            self._start(idx, slot, req, fed)
+
+    def _start(self, idx: int, slot: _Slot, req: Request,
+               fed: np.ndarray) -> None:
+        padded = np.zeros((1, self.prefill_len), np.int32)
+        padded[0, :fed.size] = fed
+        batch = {"tokens": jnp.asarray(padded),
+                 "labels": jnp.zeros_like(jnp.asarray(padded))}
+        last, pcache = self._prefill(
+            self.params, batch, jnp.asarray([fed.size - 1], jnp.int32))
+        if self.pages is not None:
+            self.cache = self._insert(
+                self.cache, pcache, jnp.asarray(self.pages.table[idx]))
+        else:
+            self.cache = self._insert(self.cache, pcache,
+                                      jnp.asarray(idx, jnp.int32))
+        slot.req = req
+        slot.pos = fed.size
+        slot.admitted_at = self._admit_seq
+        self._admit_seq += 1
+        if req.tokens:  # preemption resume: pending token already known
+            slot.token = req.tokens[-1]
+        else:
+            self._emit(slot, int(np.asarray(jnp.argmax(last, axis=-1))[0]))
+
+    def _ensure_pages(self) -> None:
+        """Grow page tables so every active slot can write at its position;
+        preempt youngest-first (possibly the growing slot itself) when the
+        pool runs dry."""
+        if self.pages is None:
+            return
+        for idx, slot in enumerate(self.slots):
+            while slot.active and not self.pages.ensure(idx, slot.pos):
+                victims = [s for s in self.slots
+                           if s.active and self._preemptable(s)]
+                if not victims:
+                    raise RuntimeError(
+                        "page pool dry and every active request grew past "
+                        "prefill_len (cannot re-prefill) — size num_blocks "
+                        "for the live working set")
+                victim = max(victims, key=lambda s: s.admitted_at)
+                self._preempt(victim)
+                if victim is slot:
+                    break
+
+    # -- the step ----------------------------------------------------------
+
+    def step(self) -> None:
+        """Admit what fits, then run one fixed-shape decode step."""
+        now = self._now()
+        self._admit(now)
+        self._ensure_pages()
+        active = [(i, s) for i, s in enumerate(self.slots) if s.active]
+        if not active:
+            return
+        for i, s in active:
+            self._positions[i] = s.pos
+            self._tokens[i, 0] = s.token
+        if self.pages is not None and self._pt_version != self.pages.version:
+            # the decoded cache echoes its page table, so steps that didn't
+            # admit/grow/release skip the host->device table upload; the
+            # upload uses the step's own output sharding so the executable
+            # signature never flips between uploaded and echoed tables
+            self.cache = pc.with_page_table(
+                self.cache, self.pages.table,
+                sharding=NamedSharding(self.mesh, PartitionSpec()))
+            self._pt_version = self.pages.version
+        _, self.cache, nxt = self._decode(
+            self.params, self.cache, jnp.asarray(self._tokens),
+            jnp.asarray(self._positions), None)
+        nxt = np.asarray(nxt)
+        for i, s in active:
+            if not s.active:  # preempted between bookkeeping passes
+                continue
+            s.pos += 1
+            self._emit(s, int(nxt[i, 0]))
+
+    def run(self, poll: float = 0.0005) -> Dict[int, np.ndarray]:
+        """Drive until queue and slots drain; returns rid -> tokens."""
+        while self.has_work():
+            if not any(s.active for s in self.slots) and self.queue:
+                wait = self.queue[0].arrival - self._now()
+                if wait > 0:
+                    time.sleep(min(wait, poll * 100))
+                    continue
+            self.step()
+        return {rid: np.asarray(r.tokens, np.int32)
+                for rid, r in self.finished.items()}
+
+    # -- trace stats -------------------------------------------------------
+
+    def reset_stats(self) -> None:
+        """Drop finished-request records and re-anchor the trace clock —
+        call between a compile-warmup run and a measured trace replay."""
+        if self.has_work():
+            raise RuntimeError("reset_stats with work in flight")
+        self.finished.clear()
+        self._t0 = None
+
+    def latency_stats(self) -> Dict[str, float]:
+        """Completion-latency percentiles + throughput over finished reqs."""
+        reqs = list(self.finished.values())
+        if not reqs:
+            return {}
+        lat = np.asarray([r.t_done - r.arrival for r in reqs])
+        first = np.asarray([r.t_first - r.arrival for r in reqs])
+        total_tok = sum(len(r.tokens) for r in reqs)
+        span = max(max(r.t_done for r in reqs), 1e-9)
+        return {
+            "requests": float(len(reqs)),
+            "generated_tokens": float(total_tok),
+            "tok_per_s": total_tok / span,
+            "p50_latency_s": float(np.percentile(lat, 50)),
+            "p95_latency_s": float(np.percentile(lat, 95)),
+            "p50_first_token_s": float(np.percentile(first, 50)),
+            "preemptions": float(sum(r.preemptions for r in reqs)),
+        }

@@ -1,0 +1,194 @@
+"""Serve-time export: optimal factor truncation, the Algorithm-1 merge
+guard, and checkpoint round-trip + logits fidelity on the smoke LM."""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.configs.base import DistConfig, LRDConfig, RunConfig, ShapeConfig
+from repro.core import svd
+from repro.core.decompose import iter_factor_groups, map_factor_groups
+from repro.launch import steps
+from repro.serving.export import export_for_serving
+
+
+def _lrd_params(seed=0):
+    cfg = get_smoke_config("smollm-360m")
+    run = RunConfig(model=cfg, shape=ShapeConfig("s", 16, 2, "decode"),
+                    lrd=LRDConfig(enabled=True, rank_quantize=False,
+                                  min_dim=16),
+                    dist=DistConfig(fsdp=False, remat="none"))
+    params, _ = steps.init_params(run, jax.random.PRNGKey(seed))
+    return cfg, run, params
+
+
+def test_truncate_factors_matches_svd_of_product():
+    u = jax.random.normal(jax.random.PRNGKey(0), (48, 12), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(1), (12, 32), jnp.float32)
+    w = u @ v
+    u2, v2 = svd.truncate_factors(u, v, 6)
+    assert u2.shape == (48, 6) and v2.shape == (6, 32)
+    ur, vr = svd.svd_decompose(w, 6)
+    e_qr = float(svd.reconstruction_error(w, u2, v2))
+    e_ref = float(svd.reconstruction_error(w, ur, vr))
+    assert abs(e_qr - e_ref) <= 1e-3 * e_ref  # Eckart-Young-optimal
+    # stacked factors truncate per layer
+    u3, v3 = svd.truncate_factors(jnp.stack([u, 2 * u]), jnp.stack([v, v]), 6)
+    assert u3.shape == (2, 48, 6)
+    e0 = float(svd.reconstruction_error(w, u3[0], v3[0]))
+    assert abs(e0 - e_ref) <= 1e-3 * e_ref
+    # rank >= current: identity
+    u4, v4 = svd.truncate_factors(u, v, 12)
+    assert u4 is u and v4 is v
+
+
+def test_truncate_factors_moe_expert_stacks():
+    """MoE expert factors are (L, E, C, r)/(L, E, r, S) — truncation must
+    handle arbitrary leading stack dims."""
+    u = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 16, 8), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 8, 12), jnp.float32)
+    u2, v2 = svd.truncate_factors(u, v, 4)
+    assert u2.shape == (2, 3, 16, 4) and v2.shape == (2, 3, 4, 12)
+    w = u[1, 2] @ v[1, 2]
+    ur, vr = svd.svd_decompose(w, 4)
+    e = float(svd.reconstruction_error(w, u2[1, 2], v2[1, 2]))
+    e_ref = float(svd.reconstruction_error(w, ur, vr))
+    assert abs(e - e_ref) <= 1e-3 * max(e_ref, 1e-6)
+
+
+def test_export_handles_moe_checkpoint():
+    cfg = get_smoke_config("olmoe-1b-7b")
+    run = RunConfig(model=cfg, shape=ShapeConfig("s", 16, 2, "decode"),
+                    lrd=LRDConfig(enabled=True, rank_quantize=False,
+                                  min_dim=8),
+                    dist=DistConfig(fsdp=False, remat="none"))
+    params, _ = steps.init_params(run, jax.random.PRNGKey(0))
+    exported, report = export_for_serving(params, backend="analytic-tpu")
+    assert report.layers
+    # expert triples must keep a uniform layout: the EP MoE path feeds
+    # gate/up/down into one shard_map, so expert groups truncate but are
+    # never merged dense
+    def expert_dicts(tree):
+        if isinstance(tree, dict):
+            if "experts" in tree:
+                yield tree["experts"]
+            for v in tree.values():
+                yield from expert_dicts(v)
+
+    saw_experts = False
+    for ex in expert_dicts(exported):
+        saw_experts = True
+        layouts = {frozenset(ex[k]) - {"bias"} for k in ("gate", "up", "down")}
+        assert layouts == {frozenset(("u", "v"))}, layouts
+    assert saw_experts
+    from repro.models import lm as lm_mod
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                              cfg.vocab_size)
+    lg, _, _ = lm_mod.lm_apply(exported, toks, cfg, mode="full")
+    assert np.isfinite(np.asarray(lg, np.float32)).all()
+
+
+def test_export_skips_groups_with_extra_leaves():
+    """Folded-BN conv groups ({u, v, scale, bn_bias}) must pass through
+    untouched — linear-group surgery would drop the affine leaves."""
+    group = {"u": jnp.ones((16, 4)), "v": jnp.ones((4, 16)),
+             "scale": jnp.ones((16,)), "bn_bias": jnp.zeros((16,))}
+    tree = {"layer": group, "proj": {"u": jnp.ones((16, 4)),
+                                     "v": jnp.ones((4, 16))}}
+    exported, report = export_for_serving(tree, backend="analytic-tpu")
+    assert set(exported["layer"]) == {"u", "v", "scale", "bn_bias"}
+    assert "layer" not in report.layers and "proj" in report.layers
+
+
+def test_export_truncates_and_merges_per_algorithm1():
+    _, _, params = _lrd_params()
+    exported, report = export_for_serving(params, backend="analytic-tpu")
+    assert report.layers  # every factor group got a decision
+    groups = dict(iter_factor_groups(exported))
+    for path, lay in report.layers.items():
+        if lay.merged:
+            assert path not in groups  # served dense: {u,v} -> {kernel}
+            assert lay.decomposed_time >= lay.original_time
+        else:
+            g = groups[path]
+            assert g["u"].shape[-1] == lay.rank_serve <= lay.rank_train
+            assert lay.decomposed_time < lay.original_time
+    # forcing an always-slow decomposition merges every layer
+    forced, rep2 = export_for_serving(
+        params, backend="measured", probe_tokens=4,
+        measured_dtype=jnp.float32)
+    assert all(isinstance(l.merged, bool) for l in rep2.layers.values())
+
+
+def test_export_roundtrip_checkpoint_and_logits_tolerance():
+    """Satellite: the exported artifact round-trips through
+    checkpoint/store.py and its logits stay within tolerance of the
+    truncated-SVD reference on the smoke LM."""
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+    from repro.checkpoint.store import latest_checkpoint
+    from repro.models import lm as lm_mod
+
+    cfg, run, params = _lrd_params(seed=4)
+    exported, report = export_for_serving(params, backend="analytic-tpu")
+
+    # reference: same serve ranks, but via truncated SVD of the *product*
+    def ref_group(path, group):
+        lay = report.layers[path]
+        w = jnp.matmul(group["u"].astype(jnp.float32),
+                       group["v"].astype(jnp.float32))
+        if lay.merged:
+            out = {"kernel": w.astype(group["u"].dtype)}
+        else:
+            u2, v2 = svd.svd_decompose(w, lay.rank_serve)
+            out = {"u": u2.astype(group["u"].dtype),
+                   "v": v2.astype(group["v"].dtype)}
+        if "bias" in group:
+            out["bias"] = group["bias"]
+        return out
+
+    reference = map_factor_groups(params, ref_group)
+
+    toks = jax.random.randint(jax.random.PRNGKey(7), (2, 16), 0,
+                              cfg.vocab_size)
+    lg_exp, _, _ = lm_mod.lm_apply(exported, toks, cfg, mode="full")
+    lg_ref, _, _ = lm_mod.lm_apply(reference, toks, cfg, mode="full")
+    scale = float(np.abs(np.asarray(lg_ref, np.float32)).max()) + 1e-9
+    rel = np.abs(np.asarray(lg_exp, np.float32)
+                 - np.asarray(lg_ref, np.float32)).max() / scale
+    assert rel < 5e-3, rel
+
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, {"params": exported},
+                        extra={"export": {"backend": report.backend}})
+        restored, step, extra = load_checkpoint(latest_checkpoint(d))
+        assert step == 1 and extra["export"]["backend"] == "analytic-tpu"
+        ra, rb = (jax.tree_util.tree_leaves(restored["params"]),
+                  jax.tree_util.tree_leaves(exported))
+        assert len(ra) == len(rb)
+        for a, b in zip(ra, rb):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        lg_rt, _, _ = lm_mod.lm_apply(
+            jax.tree_util.tree_map(jnp.asarray, restored["params"]), toks,
+            cfg, mode="full")
+        np.testing.assert_array_equal(np.asarray(lg_rt), np.asarray(lg_exp))
+
+
+def test_exported_params_serve_through_scheduler():
+    """The exported (partly merged, partly truncated) tree drops into the
+    continuous-batching engine unchanged."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.serving import ServeEngine
+
+    cfg, run, params = _lrd_params(seed=5)
+    exported, _ = export_for_serving(params, backend="analytic-tpu")
+    eng = ServeEngine(run, exported, make_host_mesh(1, 1), max_len=24,
+                      num_slots=2, prefill_len=12, block_size=4)
+    outs = eng.serve([{"prompt": np.arange(1, 9, dtype=np.int32),
+                       "max_new": 4},
+                      {"prompt": np.arange(3, 13, dtype=np.int32),
+                       "max_new": 6}])
+    assert [len(o) for o in outs] == [4, 6]
+    assert eng.scheduler.decode_compiles == 1
