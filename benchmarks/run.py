@@ -49,7 +49,8 @@ def main() -> None:
 
     from benchmarks import (fig2_rank_sweep, fig3_freezing_convergence,
                             kernel_microbench, lm_throughput,
-                            serve_throughput, table1_resnet_throughput,
+                            serve_throughput, shard_scaling,
+                            table1_resnet_throughput,
                             table2_decomposition_time, table3_accuracy,
                             table4_vit, train_freezing)
 
@@ -62,6 +63,9 @@ def main() -> None:
         guard("Train freezing: step walltime + live-state bytes "
               "(partitioned state)",
               train_freezing.main, record_as="train_freezing")
+        guard("Shard scaling: per-phase step time + collective bytes vs "
+              "device count (8-dev host mesh)",
+              shard_scaling.main, record_as="shard_scaling")
         guard("Serve throughput: Poisson trace, dense vs LRD vs "
               "rank-quantized export",
               serve_throughput.main, record_as="serve_throughput")
@@ -94,6 +98,9 @@ def main() -> None:
     guard("Train freezing: step walltime + live-state bytes "
           "(partitioned state)",
           train_freezing.main, record_as="train_freezing")
+    guard("Shard scaling: per-phase step time + collective bytes vs "
+          "device count (8-dev host mesh)",
+          shard_scaling.main, record_as="shard_scaling")
     guard("Serve throughput: Poisson trace, dense vs LRD vs "
           "rank-quantized export",
           serve_throughput.main, record_as="serve_throughput")

@@ -414,3 +414,29 @@ class HloModule:
 
 def analyze_hlo(text: str) -> HloCost:
     return HloModule(text).entry_cost()
+
+
+def collective_shapes(text: str) -> List[Tuple[str, str, Tuple[int, ...]]]:
+    """Every collective instruction in ``text`` as ``(class, dtype, dims)``.
+
+    ``class`` is the op base name (``all-reduce``, ``all-gather``,
+    ``reduce-scatter``, ``all-to-all``, ``collective-permute``; async
+    ``-start`` forms normalized), one entry per array in the instruction's
+    (possibly tuple) result type.  This is what the freezing-aware
+    sharding tests grep: a frozen factor must contribute NO entry at its
+    shape (DESIGN.md §9), while the trainable partition's grad all-reduce
+    and FSDP gathers show up as usual.  Shapes are per-shard (post-SPMD).
+    """
+    mod = HloModule(text)
+    out: List[Tuple[str, str, Tuple[int, ...]]] = []
+    for instrs in mod.computations.values():
+        for instr in instrs:
+            base = instr.op.replace("-start", "")
+            if base not in _COLLECTIVES or instr.op.endswith("-done"):
+                continue
+            for dt, dims in _SHAPE_RE.findall(instr.type_str):
+                if dt not in _DTYPE_BYTES:
+                    continue
+                shape = tuple(int(d) for d in dims.split(",") if d)
+                out.append((base, dt, shape))
+    return out

@@ -12,7 +12,12 @@ Design properties required at scale (DESIGN.md §5):
 * **mesh-agnostic**: leaves are stored in logical (global) layout, so a
   checkpoint written on a (16,16) mesh restores onto ANY mesh — elastic
   re-scaling and failure recovery are the same code path (`load_checkpoint`
-  takes target shardings and `device_put`s per leaf).
+  takes target shardings and `device_put`s per leaf; the sharded train
+  driver builds them per the CURRENT mesh via
+  ``launch.steps.packed_state_shardings``, reading the saved freeze phase
+  from :meth:`CheckpointManager.peek_extra` first).  The source mesh rides
+  in the manifest ``extra`` for provenance only — it never constrains the
+  restore target.
 * **atomic**: a crash mid-save can never corrupt the latest checkpoint —
   writes go to ``.tmp-step_N`` and are renamed only after fsync; restore
   picks the newest directory containing ``.complete``.
@@ -218,6 +223,30 @@ class CheckpointManager:
         if self._pending is not None:
             self._pending.result()
             self._pending = None
+
+    def latest_step(self) -> Optional[int]:
+        """Step of the newest COMPLETE checkpoint, or None.  Cheap (reads
+        directory names only — the step is encoded in ``step_N``) — lets
+        the elastic-resume path decide whether to build target shardings
+        before paying for a restore."""
+        self.wait()
+        latest = latest_checkpoint(self.dir)
+        if latest is None:
+            return None
+        return int(latest.name.split("_", 1)[1])
+
+    def peek_extra(self) -> Dict:
+        """The ``extra`` dict of the newest complete checkpoint WITHOUT
+        loading any leaf — the resume path reads the saved freeze phase
+        (and mesh provenance) here first, so it can partition the target
+        shardings (``launch.steps.packed_state_shardings``) to match what
+        is on disk before restoring onto the current mesh."""
+        self.wait()
+        latest = latest_checkpoint(self.dir)
+        if latest is None:
+            return {}
+        return json.loads((latest / "manifest.json").read_text()).get(
+            "extra", {})
 
     def due(self, step: int) -> bool:
         """True when ``maybe_save(step, ...)`` would save — lets callers

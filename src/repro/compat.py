@@ -37,12 +37,19 @@ _MAKE_MESH_HAS_AXIS_TYPES = (
 )
 
 
-def make_mesh(shape: Sequence[int], names: Sequence[str]):
-    """``jax.make_mesh`` with all axes Auto, on any supported jax."""
+def make_mesh(shape: Sequence[int], names: Sequence[str], devices=None):
+    """``jax.make_mesh`` with all axes Auto, on any supported jax.
+
+    ``devices`` (optional) builds the mesh over an explicit device subset —
+    how ``launch.mesh.make_host_mesh`` carves sub-meshes out of a forced
+    8-device host platform for the shard-scaling benchmark and the
+    elastic-resume tests.
+    """
+    kw = {"devices": devices} if devices is not None else {}
     if _MAKE_MESH_HAS_AXIS_TYPES:
         return jax.make_mesh(shape, names,
-                             axis_types=(AxisType.Auto,) * len(names))
-    return jax.make_mesh(shape, names)
+                             axis_types=(AxisType.Auto,) * len(names), **kw)
+    return jax.make_mesh(shape, names, **kw)
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,

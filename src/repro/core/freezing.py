@@ -26,6 +26,18 @@ structure of ``params`` (name-keyed like :func:`freeze_mask`), with ``None``
 at the complementary positions.  ``None`` is an empty pytree node, so
 ``tree_map``/``tree_leaves`` over a partition skip the holes, and
 ``merge(trainable, frozen)`` reconstructs the original tree exactly.
+
+Shard-awareness (DESIGN.md §9): :func:`partition` and :func:`merge` are
+pure restructuring — no leaf is copied, so a ``jax.Array`` keeps its
+``NamedSharding`` through any partition/merge round-trip.  Under the
+sharded driver the two partitions live under DIFFERENT placements
+(trainable: FSDP/TP param rules; frozen: ``FROZEN_PARAM_RULES``,
+replicated over the DP axes), so an Algorithm-2 phase swap must re-place
+exactly the leaves whose partition membership changed —
+:func:`groups_to_replace` names them, and
+``launch.steps.repartition_state(mesh=...)`` device_puts only those,
+leaving every other leaf's buffers untouched (no whole-state resharding
+reset at an epoch boundary).
 """
 
 from __future__ import annotations
@@ -39,7 +51,8 @@ import jax.numpy as jnp
 __all__ = ["FreezeMode", "factor_group", "freeze_mask", "apply_freeze",
            "partition", "merge", "check_partition",
            "partition_moments", "merge_moments",
-           "phase_for_epoch", "frozen_group_for_phase"]
+           "phase_for_epoch", "frozen_group_for_phase",
+           "groups_to_replace", "phase_of_partition"]
 
 # Leaf names of decomposed factors -> group id (see module docstring).
 _SVD_GROUPS = {"u": 0, "v": 1}
@@ -84,6 +97,46 @@ def frozen_group_for_phase(phase: int) -> int | None:
     request a frozen cotangent in the first place.
     """
     return phase if phase in (0, 1) else None
+
+
+def groups_to_replace(old_phase: int, new_phase: int) -> frozenset:
+    """Factor groups whose partition membership changes between phases.
+
+    A group in the result moves trainable<->frozen at the
+    ``old_phase -> new_phase`` swap, so under the sharded driver its leaves
+    (params and optimizer moments) need re-placement; every other leaf's
+    placement is already correct and must not be touched (DESIGN.md §9).
+    Phase ``-1`` (nothing frozen) composes: ``groups_to_replace(-1, 0)``
+    is ``{0}``, ``groups_to_replace(0, 1)`` is ``{0, 1}``.
+    """
+    old = {old_phase} if old_phase in (0, 1) else set()
+    new = {new_phase} if new_phase in (0, 1) else set()
+    return frozenset(old ^ new)
+
+
+def phase_of_partition(trainable: Any, frozen: Any) -> int:
+    """The phase a ``(trainable, frozen)`` partition was built for.
+
+    Derived from which factor group populates the frozen tree (``-1`` when
+    nothing is frozen) — lets a resumed/handed-over state report its own
+    phase without a side channel.  Host-side tree walk, touches no data.
+    """
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            for name, sub in tree.items():
+                if isinstance(sub, dict):
+                    g = walk(sub)
+                    if g is not None:
+                        return g
+                elif sub is not None:
+                    g = factor_group(name)
+                    if g is not None:
+                        return g
+        return None
+
+    g = walk(frozen)
+    return -1 if g is None else g
 
 
 def freeze_mask(params: Any, phase: int) -> Any:

@@ -1,10 +1,13 @@
 from repro.distributed.sharding import (  # noqa: F401
     ACT_RULES,
     ACT_RULES_SP,
+    FROZEN_PARAM_RULES,
     PARAM_RULES,
     PARAM_RULES_NO_FSDP,
     axis_rules,
+    current_manual_axes,
     current_mesh,
+    named_shardings,
     param_specs,
     shard,
 )

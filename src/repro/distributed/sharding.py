@@ -14,6 +14,13 @@ Two rule tables each for params and activations:
                             ZeRO-3; the scan body all-gathers one layer slice
                             at a time (overlapped by XLA's async collectives).
 * ``PARAM_RULES_NO_FSDP``   TP only (weights replicated across data).
+* ``FROZEN_PARAM_RULES``    the FROZEN partition of a sequentially-frozen
+                            train state (DESIGN.md §9): replicated across
+                            the data/pod axes and TP-sharded over model only
+                            where the forward consumes the shard locally, so
+                            a frozen factor appears in NO cross-device
+                            collective — no grad all-reduce (it has no grad),
+                            no FSDP all-gather (it is not storage-sharded).
 * ``ACT_RULES``             standard: batch over (pod, data), heads/mlp/vocab
                             over model, sequence replicated.
 * ``ACT_RULES_SP``          sequence-parallel decode: long KV caches / SSM
@@ -29,7 +36,8 @@ from __future__ import annotations
 import contextlib
 import re
 import threading
-from typing import Any, Dict, Optional, Sequence, Tuple, Union
+import warnings
+from typing import Any, Dict, FrozenSet, Optional, Sequence, Tuple, Union
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -59,6 +67,14 @@ PARAM_RULES: RuleTable = {
 
 PARAM_RULES_NO_FSDP: RuleTable = dict(PARAM_RULES, embed=(None,))
 
+# Frozen-partition layout (DESIGN.md §9): no ZeRO storage sharding at all —
+# the rank dim stays replicated (sharding it over data/model would force an
+# all-gather before every use), output-feature dims keep the TP ``model``
+# sharding the activations consume locally.  The result is a placement with
+# zero collectives attached to the factor: "replicated-and-parked per host".
+FROZEN_PARAM_RULES: RuleTable = dict(
+    PARAM_RULES_NO_FSDP, rank=(None,), conv=(None,))
+
 ACT_RULES: RuleTable = {
     "batch": (("pod", "data"), "data", None),
     "seq": (None,),
@@ -86,23 +102,43 @@ class _Ctx(threading.local):
         self.mesh: Optional[Mesh] = None
         self.act_rules: Optional[RuleTable] = None
         self.param_rules: Optional[RuleTable] = None
+        self.manual_axes: FrozenSet[str] = frozenset()
 
 
 _CTX = _Ctx()
 
 
 @contextlib.contextmanager
-def axis_rules(mesh: Mesh, *, act: RuleTable = ACT_RULES, params: RuleTable = PARAM_RULES):
-    prev = (_CTX.mesh, _CTX.act_rules, _CTX.param_rules)
+def axis_rules(mesh: Mesh, *, act: RuleTable = ACT_RULES,
+               params: RuleTable = PARAM_RULES,
+               manual: FrozenSet[str] = frozenset()):
+    """Activate ``mesh`` + rule tables for :func:`shard` / :func:`param_specs`.
+
+    ``manual`` names the mesh axes that are *manual* (shard_map) in the
+    enclosing region — e.g. the DP axes inside
+    ``distributed.compression.value_and_grad_compressed``.  Constraint
+    resolution must not reference a manual axis, and nested shard_map
+    dispatchers (``kernels.ops``) use it to stand down rather than
+    double-map an axis.
+    """
+    prev = (_CTX.mesh, _CTX.act_rules, _CTX.param_rules, _CTX.manual_axes)
     _CTX.mesh, _CTX.act_rules, _CTX.param_rules = mesh, act, params
+    _CTX.manual_axes = frozenset(manual)
     try:
         yield
     finally:
-        _CTX.mesh, _CTX.act_rules, _CTX.param_rules = prev
+        (_CTX.mesh, _CTX.act_rules, _CTX.param_rules,
+         _CTX.manual_axes) = prev
 
 
 def current_mesh() -> Optional[Mesh]:
+    """The mesh of the innermost active :func:`axis_rules` context."""
     return _CTX.mesh
+
+
+def current_manual_axes() -> FrozenSet[str]:
+    """Mesh axes that are manual (shard_map) in the enclosing region."""
+    return _CTX.manual_axes
 
 
 # --------------------------------------------------------------------------
@@ -137,9 +173,34 @@ def _resolve_spec(shape: Sequence[int], axes: Sequence[Optional[str]],
     return P(*parts)
 
 
+_warned_no_rules = False
+
+
 def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
-    """Annotate activation ``x`` with logical axes (no-op outside axis_rules)."""
+    """Annotate activation ``x`` with logical axes.
+
+    Contract: the annotation only takes effect inside an active
+    :func:`axis_rules` context — that is what supplies the mesh and the
+    logical→mesh rule table.  **Outside any context this is a silent
+    no-op** (by design: model code is written once and also runs
+    single-device / in unit tests), except that the FIRST such call in a
+    process emits a ``UserWarning`` so a launch-layer bug — building a
+    sharded step without entering ``axis_rules`` — surfaces instead of
+    silently producing a fully-replicated program.  Step builders
+    (``launch/steps.py``) always trace model code under ``axis_rules``.
+    """
     if _CTX.mesh is None or _CTX.act_rules is None:
+        global _warned_no_rules
+        if not _warned_no_rules:
+            _warned_no_rules = True
+            warnings.warn(
+                "repro.distributed.sharding.shard() called outside an "
+                "axis_rules(mesh, ...) context: sharding annotations are "
+                "no-ops and the traced program will be unpartitioned. "
+                "Wrap the trace in `with axis_rules(mesh): ...` (done "
+                "automatically by launch/steps step builders). This "
+                "warning is emitted once per process.",
+                UserWarning, stacklevel=2)
         return x
     if len(axes) != x.ndim:
         raise ValueError(f"shard: {len(axes)} axes for rank-{x.ndim} tensor {x.shape}")
@@ -232,6 +293,15 @@ def param_specs(params: Any, mesh: Optional[Mesh] = None,
 
 def named_shardings(params: Any, mesh: Optional[Mesh] = None,
                     rules: Optional[RuleTable] = None) -> Any:
+    """``NamedSharding`` pytree for a param tree (``param_specs`` + mesh).
+
+    This is the placement tree the sharded train driver feeds to
+    ``jax.device_put`` / ``jax.jit(in_shardings=...)``: the TRAINABLE
+    partition resolves under the run's param rules (FSDP or TP), the
+    FROZEN partition under :data:`FROZEN_PARAM_RULES` (see
+    ``launch.steps.state_shardings``).  ``None`` holes pass through, so a
+    freezing partition maps leaf-for-leaf.
+    """
     mesh = mesh or _CTX.mesh
     specs = param_specs(params, mesh, rules)
     return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs,

@@ -27,11 +27,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Union
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+from repro.distributed import sharding as _shmod
 from repro.kernels import ref
 from repro.kernels.lowrank_bwd import (lowrank_matmul_du, lowrank_matmul_dv,
                                        lowrank_matmul_dx)
@@ -122,6 +125,139 @@ def _divisible(m: int, c: int, s: int, bm: int, bk: int, bn: int) -> bool:
     return m % bm == 0 and c % bk == 0 and s % bn == 0
 
 
+# --------------------------------------------------------------------------
+# shard_map compatibility (DESIGN.md §9)
+# --------------------------------------------------------------------------
+#
+# A pallas_call is a custom call: the SPMD partitioner cannot split it, so
+# tracing one under a >1-device mesh would force XLA to all-gather every
+# operand — including the factors, defeating both TP and the frozen-factor
+# zero-traffic contract.  Under an active multi-device ``axis_rules`` mesh
+# the dispatchers therefore run the fused kernels inside a FULL-MANUAL
+# ``shard_map``: batch rows over the DP axes, the second factor / output
+# columns over ``model``, the first factor and rank dim replicated (matching
+# FROZEN_PARAM_RULES / the all-gathered ZeRO layout).  The backward is a
+# wrapper-level ``custom_vjp`` whose cotangent psums are built per factor
+# ONLY when that factor is trainable — with a static ``freeze_group`` the
+# frozen factor's backward kernel AND its cross-device psum are absent from
+# the jaxpr (the cotangent is a host-built literal zeros outside the mapped
+# region), extending the §3 kernel-absence contract to collectives.
+
+
+def _multi_device_mesh() -> bool:
+    """True when tracing under a >1-device ``axis_rules`` mesh — where the
+    BARE pallas_call path is forbidden (the partitioner would replicate
+    it); the choice is then shard_map or the jnp fallback, never bare."""
+    mesh = _shmod.current_mesh()
+    return mesh is not None and mesh.devices.size > 1
+
+
+def _sharded_ctx(m: int, s: int) -> Optional[Tuple]:
+    """(mesh, batch_axes, model_axis) when the fused kernels must run under
+    shard_map; None for single-device / no-mesh / already-manual tracing."""
+    mesh = _shmod.current_mesh()
+    if mesh is None or mesh.devices.size <= 1:
+        return None
+    if _shmod.current_manual_axes():
+        return None  # enclosing shard_map owns the mapping (e.g. int8 DP)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    act = _shmod._CTX.act_rules or _shmod.ACT_RULES
+    spec = _shmod._resolve_spec((m, s), ("batch", None), act, mesh)
+    part = spec[0]
+    batch_axes = (() if part is None
+                  else (part,) if isinstance(part, str) else tuple(part))
+    model_axis = ("model" if sizes.get("model", 1) > 1 and s % sizes["model"] == 0
+                  else None)
+    if not batch_axes and model_axis is None:
+        return None
+    return mesh, batch_axes, model_axis
+
+
+def _axis_size(mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 1
+    for a in axes:
+        total *= sizes[a]
+    return total
+
+
+def _bpart(batch_axes):
+    if not batch_axes:
+        return None
+    return batch_axes[0] if len(batch_axes) == 1 else batch_axes
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10))
+def _lowrank_sharded(x, u, v, mesh, batch_axes, model_axis,
+                     block_m, block_k, block_n, interpret, freeze_group):
+    """Fused low-rank matmul under full-manual shard_map (see module notes).
+
+    Specs: ``x (M, C)`` rows over ``batch_axes``; ``u (C, r)`` replicated;
+    ``v (r, S)`` columns over ``model_axis``; out ``(M, S)`` rows x cols.
+    """
+    kw = dict(block_m=block_m, block_k=block_k, block_n=block_n,
+              interpret=interpret)
+    return shard_map(
+        functools.partial(lowrank_matmul, **kw), mesh=mesh,
+        in_specs=(P(_bpart(batch_axes), None), P(), P(None, model_axis)),
+        out_specs=P(_bpart(batch_axes), model_axis),
+        check_vma=False)(x, u, v)
+
+
+def _lr_sharded_fwd(x, u, v, mesh, batch_axes, model_axis,
+                    block_m, block_k, block_n, interpret, freeze_group):
+    y = _lowrank_sharded(x, u, v, mesh, batch_axes, model_axis,
+                         block_m, block_k, block_n, interpret, freeze_group)
+    return y, (x, u, v)
+
+
+def _lr_sharded_bwd(mesh, batch_axes, model_axis, block_m, block_k, block_n,
+                    interpret, freeze_group, res, dy):
+    x, u, v = res
+    kw = dict(block_m=block_m, block_k=block_k, block_n=block_n,
+              interpret=interpret)
+    bp = _bpart(batch_axes)
+    model = (model_axis,) if model_axis else ()
+
+    def inner(x, u, v, dy):
+        # dt/t recompute is per-shard; cotangents of replicated operands are
+        # partial over the axes their contraction is mapped on and must be
+        # psummed — EXCEPT the frozen factor's, which is never built.
+        dx = lowrank_matmul_dx(dy, u, v, **kw)
+        if model:
+            dx = jax.lax.psum(dx, model)
+        outs = [dx]
+        if freeze_group != 0:
+            du = lowrank_matmul_du(x, dy, v, out_dtype=u.dtype, **kw)
+            if batch_axes + model:
+                du = jax.lax.psum(du, batch_axes + model)
+            outs.append(du)
+        if freeze_group != 1:
+            dv = lowrank_matmul_dv(x, u, dy, out_dtype=v.dtype, **kw)
+            if batch_axes:
+                dv = jax.lax.psum(dv, batch_axes)
+            outs.append(dv)
+        return tuple(outs)
+
+    out_specs = [P(bp, None)]
+    if freeze_group != 0:
+        out_specs.append(P())
+    if freeze_group != 1:
+        out_specs.append(P(None, model_axis))
+    outs = shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(bp, None), P(), P(None, model_axis), P(bp, model_axis)),
+        out_specs=tuple(out_specs), check_vma=False)(x, u, v, dy)
+    outs = list(outs)
+    dx = outs.pop(0)
+    du = jnp.zeros(u.shape, u.dtype) if freeze_group == 0 else outs.pop(0)
+    dv = jnp.zeros(v.shape, v.dtype) if freeze_group == 1 else outs.pop(0)
+    return dx, du, dv
+
+
+_lowrank_sharded.defvjp(_lr_sharded_fwd, _lr_sharded_bwd)
+
+
 def lowrank_apply(
     x: jax.Array,
     u: jax.Array,
@@ -142,12 +278,28 @@ def lowrank_apply(
     for d in lead:
         m *= d
     use = use_kernel if use_kernel is not None else (kernel_available() or interpret)
-    if use and _divisible(m, c, s, block_m, block_k, block_n):
+    if use and _multi_device_mesh():
+        # Multi-device mesh: the bare pallas_call would be replicated by
+        # the partitioner (gathering every operand, frozen factors
+        # included); run it under shard_map when a mapping resolves and
+        # the LOCAL shapes divide the blocks, else take the jnp path,
+        # which the partitioner splits natively — NEVER the bare kernel.
+        sctx = _sharded_ctx(m, s)
+        if sctx is not None:
+            mesh, batch_axes, model_axis = sctx
+            m_l = m // _axis_size(mesh, batch_axes)
+            s_l = s // (_axis_size(mesh, (model_axis,)) if model_axis else 1)
+            if _divisible(m_l, c, s_l, block_m, block_k, block_n):
+                y = _lowrank_sharded(x.reshape(m, c), u, v, mesh, batch_axes,
+                                     model_axis, block_m, block_k, block_n,
+                                     interpret, freeze_group)
+                return y.reshape(*lead, s)
+    elif use and _divisible(m, c, s, block_m, block_k, block_n):
         y = lowrank_matmul_vjp(x.reshape(m, c), u, v,
                                block_m, block_k, block_n, interpret,
                                freeze_group)
         return y.reshape(*lead, s)
-    # One freeze contract on both paths: stop_gradient the frozen factor so
+    # One freeze contract on all paths: stop_gradient the frozen factor so
     # a shape-dependent fallback can't silently train it.
     if freeze_group == 0:
         u = jax.lax.stop_gradient(u)
@@ -212,6 +364,99 @@ def _ffn_bwd(block_m, block_k, block_n, interpret, freeze_group, res, dy):
 lowrank_ffn_vjp.defvjp(_ffn_fwd, _ffn_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10, 11, 12))
+def _lowrank_ffn_sharded(x, gu, gv, uu, uv, mesh, batch_axes, model_axis,
+                         block_m, block_k, block_n, interpret, freeze_group):
+    """Fused low-rank SwiGLU under full-manual shard_map.
+
+    Same layout contract as :func:`_lowrank_sharded`: x rows over the DP
+    axes, ``gv``/``uv`` (and the gated output) columns over ``model``,
+    ``gu``/``uu`` and both rank dims replicated.
+    """
+    kw = dict(block_m=block_m, block_k=block_k, block_n=block_n,
+              interpret=interpret)
+    bp = _bpart(batch_axes)
+    return shard_map(
+        functools.partial(lowrank_gated_ffn, **kw), mesh=mesh,
+        in_specs=(P(bp, None), P(), P(None, model_axis),
+                  P(), P(None, model_axis)),
+        out_specs=P(bp, model_axis), check_vma=False)(x, gu, gv, uu, uv)
+
+
+def _ffn_sharded_fwd(x, gu, gv, uu, uv, mesh, batch_axes, model_axis,
+                     block_m, block_k, block_n, interpret, freeze_group):
+    y = _lowrank_ffn_sharded(x, gu, gv, uu, uv, mesh, batch_axes, model_axis,
+                             block_m, block_k, block_n, interpret,
+                             freeze_group)
+    return y, (x, gu, gv, uu, uv)
+
+
+def _ffn_sharded_bwd(mesh, batch_axes, model_axis, block_m, block_k, block_n,
+                     interpret, freeze_group, res, dy):
+    x, gu, gv, uu, uv = res
+    kw = dict(block_m=block_m, block_k=block_k, block_n=block_n,
+              interpret=interpret)
+    bp = _bpart(batch_axes)
+    model = (model_axis,) if model_axis else ()
+
+    def inner(x, gu, gv, uu, uv, dy):
+        # per-shard recompute of the branch pre-activations (§3 trade),
+        # local in both the row and column shards
+        g = lowrank_matmul(x, gu, gv, **kw)
+        up = lowrank_matmul(x, uu, uv, **kw)
+        gf, upf = g.astype(jnp.float32), up.astype(jnp.float32)
+        dyf = dy.astype(jnp.float32)
+        sg = jax.nn.sigmoid(gf)
+        silu_g = gf * sg
+        dg = (dyf * upf * (sg * (1.0 + gf * (1.0 - sg)))).astype(x.dtype)
+        dup = (dyf * silu_g).astype(x.dtype)
+
+        dx = (lowrank_matmul_dx(dg, gu, gv, **kw)
+              + lowrank_matmul_dx(dup, uu, uv, **kw))
+        if model:
+            dx = jax.lax.psum(dx, model)
+        outs = [dx]
+        if freeze_group != 0:
+            dgu = lowrank_matmul_du(x, dg, gv, out_dtype=gu.dtype, **kw)
+            duu = lowrank_matmul_du(x, dup, uv, out_dtype=uu.dtype, **kw)
+            if batch_axes + model:
+                dgu = jax.lax.psum(dgu, batch_axes + model)
+                duu = jax.lax.psum(duu, batch_axes + model)
+            outs += [dgu, duu]
+        if freeze_group != 1:
+            dgv = lowrank_matmul_dv(x, gu, dg, out_dtype=gv.dtype, **kw)
+            duv = lowrank_matmul_dv(x, uu, dup, out_dtype=uv.dtype, **kw)
+            if batch_axes:
+                dgv = jax.lax.psum(dgv, batch_axes)
+                duv = jax.lax.psum(duv, batch_axes)
+            outs += [dgv, duv]
+        return tuple(outs)
+
+    out_specs = [P(bp, None)]
+    if freeze_group != 0:
+        out_specs += [P(), P()]
+    if freeze_group != 1:
+        out_specs += [P(None, model_axis), P(None, model_axis)]
+    outs = list(shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(bp, None), P(), P(None, model_axis), P(),
+                  P(None, model_axis), P(bp, model_axis)),
+        out_specs=tuple(out_specs), check_vma=False)(x, gu, gv, uu, uv, dy))
+    dx = outs.pop(0)
+    if freeze_group == 0:
+        dgu, duu = jnp.zeros(gu.shape, gu.dtype), jnp.zeros(uu.shape, uu.dtype)
+    else:
+        dgu, duu = outs.pop(0), outs.pop(0)
+    if freeze_group == 1:
+        dgv, duv = jnp.zeros(gv.shape, gv.dtype), jnp.zeros(uv.shape, uv.dtype)
+    else:
+        dgv, duv = outs.pop(0), outs.pop(0)
+    return dx, dgu, dgv, duu, duv
+
+
+_lowrank_ffn_sharded.defvjp(_ffn_sharded_fwd, _ffn_sharded_bwd)
+
+
 def lowrank_ffn_apply(
     x: jax.Array,
     gu: jax.Array, gv: jax.Array,
@@ -232,7 +477,21 @@ def lowrank_ffn_apply(
     for d in lead:
         m *= d
     use = use_kernel if use_kernel is not None else (kernel_available() or interpret)
-    if use and _divisible(m, c, f, block_m, block_k, block_n):
+    if use and _multi_device_mesh():
+        # same dispatch contract as lowrank_apply: under a multi-device
+        # mesh the bare kernel path is forbidden — shard_map or jnp.
+        sctx = _sharded_ctx(m, f)
+        if sctx is not None:
+            mesh, batch_axes, model_axis = sctx
+            m_l = m // _axis_size(mesh, batch_axes)
+            f_l = f // (_axis_size(mesh, (model_axis,)) if model_axis else 1)
+            if _divisible(m_l, c, f_l, block_m, block_k, block_n):
+                y = _lowrank_ffn_sharded(x.reshape(m, c), gu, gv, uu, uv,
+                                         mesh, batch_axes, model_axis,
+                                         block_m, block_k, block_n,
+                                         interpret, freeze_group)
+                return y.reshape(*lead, f)
+    elif use and _divisible(m, c, f, block_m, block_k, block_n):
         y = lowrank_ffn_vjp(x.reshape(m, c), gu, gv, uu, uv,
                             block_m, block_k, block_n, interpret, freeze_group)
         return y.reshape(*lead, f)

@@ -137,6 +137,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, lrd: bool = True,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per device
+        cost = cost[0] if cost else {}
     n_dev = mesh.devices.size
     mesh_tag = "multipod" if multi_pod else "singlepod"
     variant = ("lrd" if lrd else "dense") + (tag and f"-{tag}" or "")
@@ -164,9 +166,17 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, lrd: bool = True,
     out_dir.mkdir(parents=True, exist_ok=True)
     stem = f"{arch}__{shape_name}__{mesh_tag}__{variant}"
     if save_hlo:
+        hlo_text = compiled.as_text()
         hlo_path = out_dir / f"{stem}.hlo.txt"
-        hlo_path.write_text(compiled.as_text())
+        hlo_path.write_text(hlo_text)
         result["hlo_path"] = str(hlo_path)
+        # per-device collective traffic of one step, by class — the number
+        # the shard-scaling bench tracks vs device count, and the one the
+        # frozen-factor zero-traffic contract (DESIGN.md §9) is audited on
+        from repro.analysis.hlo import analyze_hlo
+        result["collective_bytes_per_device"] = {
+            k: int(v)
+            for k, v in analyze_hlo(hlo_text).collective_bytes.items()}
     (out_dir / f"{stem}.json").write_text(json.dumps(result, indent=1))
     return result
 

@@ -24,8 +24,32 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
-    """Small mesh over the locally available devices (tests / CPU runs)."""
+    """``(data, model)`` mesh over the locally available devices.
+
+    Used by tests, CPU runs, and the sharded train driver's ``--mesh host``
+    path.  The mesh is built over the FIRST ``data * model`` devices, so
+    sub-meshes (e.g. 1-, 2-, 4-way cells of a forced 8-device host
+    platform, or 4 of a 6-accelerator box — leftover devices idle) come
+    out of the same call; see the README "Multi-device training"
+    quickstart for the
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` recipe.
+
+    Raises ``ValueError`` with the actual counts when ``data * model``
+    exceeds the available devices, instead of letting ``mesh_utils`` fail
+    with an opaque reshape error.
+    """
     n = len(jax.devices())
-    data = min(data, n)
-    model = min(model, n // data)
-    return make_mesh_compat((data, model), ("data", "model"))
+    if data < 1 or model < 1:
+        raise ValueError(f"make_host_mesh: axis sizes must be >= 1, "
+                         f"got data={data} model={model}")
+    need = data * model
+    if need > n:
+        raise ValueError(
+            f"make_host_mesh: requested (data={data}) x (model={model}) = "
+            f"{need} devices, but only {n} device(s) are available — the "
+            f"mesh size must not exceed the device count. On CPU, force a "
+            f"host platform with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            f"(set before jax initializes).")
+    return make_mesh_compat((data, model), ("data", "model"),
+                            devices=jax.devices()[:need])

@@ -16,6 +16,16 @@ Pallas paths as the ``freeze_group`` of the
 emitted, DESIGN.md §3).  ``repartition_state`` performs the host-side
 Algorithm-2 phase swap, rotating parked optimizer moments so unfreezing
 never resets them.
+
+Sharded placement (DESIGN.md §9): :func:`state_shardings` /
+:func:`make_sharded_train_state` place the partitioned state on a mesh —
+trainable per the run's FSDP/TP layout, frozen under
+``FROZEN_PARAM_RULES`` (replicated over the DP axes: no collective ever
+touches a frozen factor), opt over the trainable partition;
+:func:`shard_batch` places per-step data, :func:`packed_state_shardings`
+builds the elastic-restore target map, :func:`check_state_placement`
+audits the contract, and ``repartition_state(mesh=...)`` re-places only
+the swapped factor group at a phase boundary.
 """
 
 from __future__ import annotations
@@ -33,8 +43,9 @@ from repro.configs.base import RunConfig
 from repro.core import freezing
 from repro.core.decompose import Decomposer
 from repro.core.policy import LM_DEFAULT, NO_LRD
-from repro.distributed import (ACT_RULES, ACT_RULES_SP, PARAM_RULES,
-                               PARAM_RULES_NO_FSDP, axis_rules, param_specs, shard)
+from repro.distributed import (ACT_RULES, ACT_RULES_SP, FROZEN_PARAM_RULES,
+                               PARAM_RULES, PARAM_RULES_NO_FSDP, axis_rules,
+                               named_shardings, param_specs, shard)
 from repro.distributed.compression import value_and_grad_compressed
 from repro.kernels.ops import KernelPolicy
 from repro.models import encdec as encdec_mod, lm
@@ -80,14 +91,23 @@ def _park(tree):
         lambda x: np.asarray(jax.device_get(x)), tree)
 
 
-def _unpark(tree):
+def _unpark(tree, mesh=None, rules=None):
     """device_put host leaves rotating back into the live state; leaves
-    already on device pass through."""
+    already on device pass through.  With ``mesh``/``rules`` the unparked
+    leaves land directly under their target opt-layout ``NamedSharding``
+    (elastic: parked slices are mesh-agnostic host numpy)."""
+    if tree == () or mesh is None or mesh.devices.size <= 1:
+        return jax.tree_util.tree_map(
+            lambda x: x if isinstance(x, jax.Array) else jax.device_put(x),
+            tree)
+    shs = named_shardings(tree, mesh, rules)
     return jax.tree_util.tree_map(
-        lambda x: x if isinstance(x, jax.Array) else jax.device_put(x), tree)
+        lambda x, sh: x if isinstance(x, jax.Array) else jax.device_put(x, sh),
+        tree, shs)
 
 
-def repartition_state(optim_cfg, state: TrainState, parked, new_phase: int):
+def repartition_state(optim_cfg, state: TrainState, parked, new_phase: int,
+                      *, mesh=None, run: Optional[RunConfig] = None):
     """Host-side Algorithm-2 phase transition.
 
     Re-partitions the merged params for ``new_phase`` and rotates the
@@ -97,14 +117,163 @@ def repartition_state(optim_cfg, state: TrainState, parked, new_phase: int):
     device_put back in — alternation never resets momentum / Adam moments,
     and parked slices never sit in device memory.  Call it between steps,
     outside jit.
+
+    With ``mesh`` (and ``run`` for the rule tables) the swap is
+    SHARD-AWARE (DESIGN.md §9): the two partitions live under different
+    placements (trainable: FSDP/TP param rules; frozen:
+    ``FROZEN_PARAM_RULES``), so exactly the leaves whose factor group
+    appears in ``freezing.groups_to_replace(old, new)`` are device_put to
+    their new placement; every other param/moment buffer is untouched —
+    a phase swap never resets the sharding (or the contents) of the rest
+    of the state.  Unparked moments are placed directly with their target
+    opt-layout sharding.
     """
+    old_phase = freezing.phase_of_partition(state.trainable, state.frozen)
     params = freezing.merge(state.trainable, state.frozen)
     trainable, frozen = freezing.partition(params, new_phase)
     active, parked = freezing.partition_moments(
         freezing.merge_moments((state.opt.mu, state.opt.nu), parked),
         new_phase)
-    opt = OptState(state.opt.step, *(_unpark(t) for t in active))
+    if mesh is None or mesh.devices.size <= 1:
+        opt = OptState(state.opt.step, *(_unpark(t) for t in active))
+        return (TrainState(trainable, frozen, opt),
+                tuple(_park(t) for t in parked))
+
+    prm = _param_rules(run) if run is not None else PARAM_RULES
+    opt_rules = _opt_rules(run) if run is not None else prm
+    moved = freezing.groups_to_replace(old_phase, new_phase)
+    trainable = _place_moved(trainable, named_shardings(trainable, mesh, prm),
+                             moved)
+    frozen = _place_moved(frozen,
+                          named_shardings(frozen, mesh, FROZEN_PARAM_RULES),
+                          moved)
+    opt = OptState(state.opt.step,
+                   *(_unpark(t, mesh, opt_rules) for t in active))
     return TrainState(trainable, frozen, opt), tuple(_park(t) for t in parked)
+
+
+def _place_moved(tree, shardings, moved_groups, name: str = ""):
+    """device_put the leaves whose factor group is in ``moved_groups`` to
+    their sharding; leave everything else alone (shared buffers intact)."""
+    if isinstance(tree, dict):
+        return {k: _place_moved(v, shardings[k], moved_groups, k)
+                for k, v in tree.items()}
+    if tree is None:
+        return None
+    if freezing.factor_group(name) in moved_groups:
+        return jax.device_put(tree, shardings)
+    return tree
+
+
+# --------------------------------------------------------------------------
+# sharded state placement (DESIGN.md §9)
+# --------------------------------------------------------------------------
+
+def state_shardings(run: RunConfig, mesh, state: TrainState) -> TrainState:
+    """``NamedSharding`` pytree mirroring a partitioned :class:`TrainState`.
+
+    The placement contract of the sharded driver, in one tree:
+
+    * ``trainable``  — the run's param layout (FSDP ZeRO-3 or TP);
+    * ``frozen``     — ``FROZEN_PARAM_RULES``: replicated over the DP axes,
+      TP-sharded over ``model`` only where consumed locally, so a frozen
+      factor appears in no cross-device collective;
+    * ``opt``        — the optimizer layout over the trainable partition
+      (data-sharded under ``zero1``), scalar ``step`` replicated.
+
+    Works on concrete or abstract states; feed it to ``jax.device_put``,
+    ``jax.jit(in_shardings=..., out_shardings=...)``, or placement asserts.
+    """
+    tr = named_shardings(state.trainable, mesh, _param_rules(run))
+    fr = named_shardings(state.frozen, mesh, FROZEN_PARAM_RULES)
+    step = NamedSharding(mesh, P())
+    mu = named_shardings(state.opt.mu, mesh, _opt_rules(run))
+    nu = (() if state.opt.nu == ()
+          else named_shardings(state.opt.nu, mesh, _opt_rules(run)))
+    return TrainState(tr, fr, OptState(step, mu, nu))
+
+
+def batch_shardings(batch, mesh):
+    """Leading-dim-over-(pod, data) ``NamedSharding`` tree for a batch."""
+    from repro.distributed.sharding import _resolve_spec
+
+    def sh(x):
+        spec = _resolve_spec(x.shape, ("batch",) + (None,) * (x.ndim - 1),
+                             ACT_RULES, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(sh, batch)
+
+
+def shard_batch(batch, mesh):
+    """device_put a (host) batch with its DP sharding — the per-step data
+    placement of the sharded train loop."""
+    return jax.tree_util.tree_map(jax.device_put, batch,
+                                  batch_shardings(batch, mesh))
+
+
+def make_sharded_train_state(run: RunConfig, params, phase: int, mesh):
+    """:func:`make_train_state` + placement on ``mesh``.
+
+    Returns ``(state, parked)`` with every device leaf carrying the
+    :func:`state_shardings` ``NamedSharding`` (trainable sharded per the
+    run's layout, frozen replicated-over-DP, opt over trainable only) and
+    ``parked`` on host, exactly as in the single-device path.
+    """
+    state, parked = make_train_state(run.optim, params, phase)
+    shs = state_shardings(run, mesh, state)
+    place = lambda t, s: jax.tree_util.tree_map(jax.device_put, t, s)
+    opt = OptState(jax.device_put(state.opt.step, shs.opt.step),
+                   place(state.opt.mu, shs.opt.mu),
+                   place(state.opt.nu, shs.opt.nu) if state.opt.nu != () else ())
+    return (TrainState(place(state.trainable, shs.trainable),
+                       place(state.frozen, shs.frozen), opt), parked)
+
+
+def packed_state_shardings(run: RunConfig, mesh, phase: int):
+    """Target shardings for a ``pack_phased_state`` checkpoint tree.
+
+    The elastic-resume placement map (``checkpoint.load_checkpoint``'s
+    ``shardings`` argument): params split per the ``phase`` partition
+    (trainable -> param layout, frozen -> ``FROZEN_PARAM_RULES``), active
+    moments under the opt layout, and ``None`` at the PARKED moment slices
+    so those leaves stay host numpy through the restore — the saved tree
+    was written mesh-agnostically, so this works across any source/target
+    mesh pair.
+    """
+    shapes = jax.eval_shape(lambda: init_params(run)[0])
+    trainable, frozen = freezing.partition(shapes, phase)
+    params_sh = freezing.merge(
+        named_shardings(trainable, mesh, _param_rules(run)),
+        named_shardings(frozen, mesh, FROZEN_PARAM_RULES))
+    mu_sh = named_shardings(trainable, mesh, _opt_rules(run))
+    nu_sh = mu_sh if run.optim.name == "adamw" else ()
+    return {"params": params_sh, "step": NamedSharding(mesh, P()),
+            "mu": mu_sh, "nu": nu_sh}
+
+
+def check_state_placement(run: RunConfig, mesh, state: TrainState) -> None:
+    """Raise if any device leaf of ``state`` deviates from the placement
+    contract (:func:`state_shardings`).  Host-side sharding comparison —
+    touches no data; the sharded driver runs it after the first step."""
+    shs = state_shardings(run, mesh, state)
+
+    def walk(t, s, path):
+        if isinstance(t, dict):
+            for k in t:
+                walk(t[k], s[k], f"{path}/{k}")
+            return
+        if t is None or s is None or not isinstance(t, jax.Array):
+            return
+        if t.sharding != s:
+            raise AssertionError(
+                f"placement drift at {path}: {t.sharding} != expected {s}")
+
+    walk(state.trainable, shs.trainable, "trainable")
+    walk(state.frozen, shs.frozen, "frozen")
+    walk(state.opt.mu, shs.opt.mu, "opt.mu")
+    if state.opt.nu != ():
+        walk(state.opt.nu, shs.opt.nu, "opt.nu")
 
 
 def make_decomposer(run: RunConfig) -> Decomposer:
@@ -263,6 +432,18 @@ def build_train_step(run: RunConfig, mesh):
                 loss, grads = value_and_grad_compressed(
                     loss_for, state.trainable, batch, mesh,
                     run.dist.grad_compression)
+                if mesh.devices.size > 1:
+                    # pin the synced grads to the optimizer layout: under
+                    # zero1 the DP all-reduce lowers to a reduce-scatter;
+                    # either way the update consumes grads in the exact
+                    # layout the moments live in (no resharding copy).
+                    # Covers the trainable partition only — frozen factors
+                    # have no grad leaf to pin.
+                    gspecs = param_specs(state.trainable, mesh,
+                                         _opt_rules(run))
+                    grads = jax.tree_util.tree_map(
+                        lambda g, sp: jax.lax.with_sharding_constraint(
+                            g, NamedSharding(mesh, sp)), grads, gspecs)
 
             new_trainable, new_opt = apply_updates(run.optim, state.trainable,
                                                    grads, state.opt)
@@ -401,14 +582,22 @@ def cache_specs(cache_shapes, run: RunConfig, mesh):
     return walk(cache_shapes, "")
 
 
-def abstract_params(run: RunConfig, mesh):
-    """eval_shape over init + attach param-layout shardings."""
-    shapes = jax.eval_shape(lambda: init_params(run)[0])
-    specs = param_specs(shapes, mesh, _param_rules(run))
+def _attach_shardings(shapes, mesh, rules):
+    """Abstract tree -> same tree with ``NamedSharding``s attached, specs
+    resolved per ``rules`` — THE way abstract leaves get placements, shared
+    by :func:`abstract_params` (full tree) and :func:`abstract_state` (the
+    per-partition rule split)."""
+    specs = param_specs(shapes, mesh, rules)
     return jax.tree_util.tree_map(
         lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
                                            sharding=NamedSharding(mesh, sp)),
         shapes, specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def abstract_params(run: RunConfig, mesh):
+    """eval_shape over init + attach param-layout shardings."""
+    shapes = jax.eval_shape(lambda: init_params(run)[0])
+    return _attach_shardings(shapes, mesh, _param_rules(run))
 
 
 def run_phase(run: RunConfig, epoch: int = 0) -> int:
@@ -425,13 +614,18 @@ def abstract_state(run: RunConfig, mesh, phase: Optional[int] = None):
 
     The optimizer-state stand-ins cover the trainable partition only, so
     dry-run memory analysis reports the structural freeze-phase saving
-    (≈ half the factor moments during any frozen phase).  ``phase`` defaults
-    to the run's epoch-0 phase.
+    (≈ half the factor moments during any frozen phase), and the FROZEN
+    stand-ins carry the ``FROZEN_PARAM_RULES`` placement (replicated over
+    DP — DESIGN.md §9), so the same analysis reports the frozen partition's
+    replication cost honestly.  ``phase`` defaults to the run's epoch-0
+    phase.
     """
     if phase is None:
         phase = run_phase(run)
-    aparams = abstract_params(run, mesh)
-    trainable, frozen = freezing.partition(aparams, phase)
+    shapes = jax.eval_shape(lambda: init_params(run)[0])
+    trainable_s, frozen_s = freezing.partition(shapes, phase)
+    trainable = _attach_shardings(trainable_s, mesh, _param_rules(run))
+    frozen = _attach_shardings(frozen_s, mesh, FROZEN_PARAM_RULES)
     opt_shapes = jax.eval_shape(lambda p: init_optimizer(run.optim, p),
                                 trainable)
     ospecs = param_specs(trainable, mesh, _opt_rules(run))

@@ -1,22 +1,37 @@
-"""Production training driver.
+"""Production training driver — MESH-NATIVE (DESIGN.md §5/§9).
+
+The loop is sharded end to end: it builds a ``(data, model)`` mesh over the
+available devices (``--mesh-data/--mesh-model``; ``--mesh production`` for
+the (16,16) / (2,16,16) pod meshes), places the partitioned TrainState via
+``steps.make_sharded_train_state`` (trainable: FSDP/TP layout; frozen:
+replicated-over-DP ``FROZEN_PARAM_RULES``; opt over the trainable partition
+only), and jits the train step with explicit in/out shardings and a DONATED
+state, so the updated state aliases the old buffers in place.  Batches are
+device_put per step with their DP sharding.  After the first step the loop
+asserts the placement contract (``steps.check_state_placement``).
 
 Fault tolerance: auto-resume from the newest complete checkpoint (params,
 optimizer, data-iterator state, freeze phase), atomic saves, SIGTERM =>
 checkpoint-then-exit (preemption), straggler detection via per-step timing
-EMA.  Elastic: checkpoints are mesh-agnostic, so restarting with a different
-device count re-shards on load.
+EMA.  Elastic: checkpoints are mesh-agnostic, the manifest records the
+source mesh for provenance, and restore device_puts every leaf under the
+CURRENT mesh's shardings (``steps.packed_state_shardings``) — restarting
+with a different device count or mesh shape re-shards on load
+(tests/test_sharded_train.py round-trips 1-device -> 8-device).
 
 Sequential freezing (paper Algorithm 2) drives a *static* phase argument:
 one compiled step per phase, swapped per epoch.  The train state is
 PARTITIONED per phase (DESIGN.md §7): at every phase boundary the loop
 re-partitions params host-side and rotates the parked optimizer-moment
-slices, so frozen factors cost nothing inside the step and unfreezing never
-resets momentum.  Checkpoints store the merged trees plus the phase, so a
-restore lands mid-schedule.
+slices — shard-aware: only the leaves whose factor group swapped are
+re-placed (``steps.repartition_state(mesh=...)``), so unfreezing never
+resets momentum and a phase swap never reshards the rest of the state.
 
-Usage (CPU demo):
+Usage (CPU demo; multi-device via the README "Multi-device training"
+recipe, XLA_FLAGS=--xla_force_host_platform_device_count=8):
   PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
-      --steps 200 --global-batch 8 --seq-len 128 --lrd --freeze sequential
+      --steps 200 --global-batch 8 --seq-len 128 --lrd --freeze sequential \
+      [--mesh-data 4 --mesh-model 2]
 """
 
 from __future__ import annotations
@@ -118,6 +133,10 @@ def main(argv=None):
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--grad-compression", default="none", choices=["none", "int8"])
     ap.add_argument("--mesh", default="host", choices=["host", "production"])
+    ap.add_argument("--mesh-data", type=int, default=0,
+                    help="host-mesh data-parallel ways (0 = all devices)")
+    ap.add_argument("--mesh-model", type=int, default=1,
+                    help="host-mesh model-parallel (TP) ways")
     ap.add_argument("--ckpt-dir", default="runs/train_ckpt")
     ap.add_argument("--save-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
@@ -125,8 +144,14 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     run = build_run(args)
-    mesh = (make_production_mesh() if args.mesh == "production"
-            else make_host_mesh(len(jax.devices()), 1))
+    if args.mesh == "production":
+        mesh = make_production_mesh()
+    else:
+        data_ways = args.mesh_data or max(
+            len(jax.devices()) // args.mesh_model, 1)
+        mesh = make_host_mesh(data_ways, args.mesh_model)
+    print(f"[mesh] {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"({mesh.devices.size} device(s))")
 
     params, plan = steps_mod.init_params(run)
     if run.lrd.enabled:
@@ -136,37 +161,55 @@ def main(argv=None):
         return steps_mod.run_phase(run, step // args.steps_per_epoch)
 
     cur_phase = phase_at(0)
-    state, parked = steps_mod.make_train_state(run.optim, params, cur_phase)
+    # placement: trainable sharded per the run's layout, frozen replicated
+    # over DP, opt over the trainable partition, parked moments on host
+    state, parked = steps_mod.make_sharded_train_state(run, params,
+                                                       cur_phase, mesh)
 
     data = LMBatchIterator(run.model.vocab_size, run.shape.seq_len,
                            run.shape.global_batch, seed=args.seed + 17)
 
+    mesh_info = {"axes": list(mesh.axis_names),
+                 "shape": [int(s) for s in mesh.devices.shape]}
     ckpt = CheckpointManager(Path(args.ckpt_dir) / f"{run.model.name}", keep=3,
                              save_every=args.save_every)
     ckpt.install_sigterm_handler()
     start_step = 0
-    restored = ckpt.restore()
+    restored = None
+    if ckpt.latest_step() is not None:
+        # elastic resume: the checkpoint is mesh-agnostic; place every leaf
+        # directly under the CURRENT mesh's shardings (parked moment slices
+        # carry no sharding and stay host numpy)
+        saved_phase = int(ckpt.peek_extra().get("phase", -1))
+        restored = ckpt.restore(
+            shardings=steps_mod.packed_state_shardings(run, mesh, saved_phase))
     if restored is not None:
         saved_state, start_step, extra = restored
         cur_phase = int(extra.get("phase", -1))
         (tr, fr, opt_r), parked_h = unpack_phased_state(saved_state, cur_phase)
-        put = lambda t: jax.tree_util.tree_map(
-            lambda x: jax.device_put(np.asarray(x)), t)
-        state = steps_mod.TrainState(put(tr), put(fr),
-                                     OptState(put(opt_r[0]), put(opt_r[1]),
-                                              put(opt_r[2])))
-        # parked moments stay HOST-side (numpy) — see steps.make_train_state
+        state = steps_mod.TrainState(tr, fr, OptState(*opt_r))
         parked = tuple(jax.tree_util.tree_map(np.asarray, t) for t in parked_h)
         data.load_state_dict(extra["data"])
-        print(f"[resume] from step {start_step} (phase {cur_phase})")
+        src = extra.get("mesh", {})
+        print(f"[resume] from step {start_step} (phase {cur_phase}, "
+              f"saved on mesh {src.get('shape', '?')} -> "
+              f"restored onto {mesh_info['shape']})")
 
     train_step = steps_mod.build_train_step(run, mesh)
     step_fns = {}
 
-    def fn_for(phase: int):
+    def fn_for(phase: int, batch):
+        # one executable per phase, with explicit shardings: the state is
+        # DONATED, so in_shardings == out_shardings lets every updated
+        # buffer alias its predecessor.  Batch shardings are derived from
+        # the iterator's actual structure, not the family's full spec set.
         if phase not in step_fns:
-            step_fns[phase] = jax.jit(functools.partial(train_step, phase=phase),
-                                      donate_argnums=(0,))
+            shs = steps_mod.state_shardings(run, mesh, state)
+            step_fns[phase] = jax.jit(
+                functools.partial(train_step, phase=phase),
+                donate_argnums=(0,),
+                in_shardings=(shs, steps_mod.batch_shardings(batch, mesh)),
+                out_shardings=(shs, None))
         return step_fns[phase]
 
     monitor = StragglerMonitor()
@@ -177,18 +220,21 @@ def main(argv=None):
         phase = phase_at(step)
         if phase != cur_phase:
             # Algorithm-2 phase swap: repartition params and rotate the
-            # parked optimizer moments (host-side, no device compute).
-            state, parked = steps_mod.repartition_state(run.optim, state,
-                                                        parked, phase)
+            # parked optimizer moments (host-side; only the swapped factor
+            # group's leaves are re-placed — DESIGN.md §9)
+            state, parked = steps_mod.repartition_state(
+                run.optim, state, parked, phase, mesh=mesh, run=run)
             cur_phase = phase
             print(f"[phase] epoch {epoch}: now training group {1 - phase}, "
                   f"group {phase} frozen out of the step")
-        batch = {k: jax.device_put(v) for k, v in next(it).items()}
+        batch = steps_mod.shard_batch(next(it), mesh)
         t0 = time.perf_counter()
-        state, metrics = fn_for(phase)(state, batch)
+        state, metrics = fn_for(phase, batch)(state, batch)
         loss = float(metrics["loss"])
         dt = time.perf_counter() - t0
         losses.append(loss)
+        if step == start_step:
+            steps_mod.check_state_placement(run, mesh, state)
         if monitor.observe(dt):
             print(f"[straggler] step {step}: {dt*1e3:.0f}ms "
                   f"(median {np.median(monitor.times)*1e3:.0f}ms)")
@@ -198,7 +244,8 @@ def main(argv=None):
                   f"{dt*1e3:.0f}ms")
         if ckpt.due(step + 1) and ckpt.maybe_save(
                 step + 1, pack_phased_state(state, parked),
-                extra={"data": data.state_dict(), "phase": phase}):
+                extra={"data": data.state_dict(), "phase": phase,
+                       "mesh": mesh_info}):
             if ckpt.preempted:
                 print(f"[preempt] checkpointed at step {step + 1}, exiting")
                 return state, losses

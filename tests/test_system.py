@@ -285,12 +285,12 @@ def test_serving_engine_generates():
 
 def test_grad_compression_quantize_accuracy():
     from repro.compat import make_mesh, shard_map
-    from repro.distributed.compression import _quantize_pmean_pod
+    from repro.distributed.compression import _quantize_pmean
 
     mesh = make_mesh((1,), ("pod",))
     g = jax.random.normal(jax.random.PRNGKey(0), (64, 64)) * 0.01
     out = shard_map(
-        lambda x: _quantize_pmean_pod(x, n_pods=1), mesh=mesh,
+        lambda x: _quantize_pmean(x, axis="pod", n=1), mesh=mesh,
         in_specs=jax.sharding.PartitionSpec(),
         out_specs=jax.sharding.PartitionSpec(), check_vma=False)(g)
     err = np.abs(np.asarray(out) - np.asarray(g)).max()
