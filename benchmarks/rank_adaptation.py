@@ -1,0 +1,197 @@
+"""In-training rank adaptation bench (DESIGN.md §10): per-phase step time,
+live trainable-partition bytes, and per-step collective sync bytes as a
+decaying rank schedule truncates factor groups at each Algorithm-2 phase
+boundary, against a fixed-rank baseline on the smoke LM.
+
+Both variants consume the SAME synthetic data stream; each epoch is one
+measurement segment (the schedule fires at the epoch boundary, so ranks are
+constant within a segment).  Bytes are measured on the LIVE concrete state
+(params of the trainable partition + grads + optimizer moments) — the thing
+the paper's training-memory claim is about; sync bytes come from the
+compiled step's post-SPMD HLO (zero on one device, real on the CI 8-device
+host mesh).
+
+Smoke acceptance (wired into run.py --smoke and ci.yml): under the decay
+schedule the trainable-partition bytes must STRICTLY decrease at every
+boundary, and the final-epoch mean loss must stay within 2% of the
+fixed-rank baseline.
+
+  PYTHONPATH=src python -m benchmarks.rank_adaptation --smoke
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from benchmarks.common import record
+from repro.analysis.hlo import analyze_hlo
+from repro.configs import get_smoke_config
+from repro.configs.base import (DistConfig, LRDConfig, OptimConfig, RunConfig,
+                                ShapeConfig)
+from repro.core import rank_adapt
+from repro.data import LMBatchIterator
+from repro.launch import steps
+from repro.launch.mesh import make_host_mesh
+
+ARCH = "smollm-360m"
+_SYNC_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all")
+
+
+def _bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def _partition_bytes(state) -> int:
+    """Live trainable-partition bytes: params + grads (accum dtype = fp32
+    here) + optimizer moments — the per-device training-memory quantity the
+    rank schedule shrinks."""
+    params_b = _bytes(state.trainable)
+    grads_b = sum(x.size * 4 for x in jax.tree_util.tree_leaves(state.trainable))
+    opt_b = _bytes(state.opt.mu) + (_bytes(state.opt.nu)
+                                    if state.opt.nu != () else 0)
+    return params_b + grads_b + opt_b
+
+
+def _sync_bytes(jitted, state, batch, mesh) -> int:
+    if mesh.devices.size <= 1:
+        return 0
+    txt = jitted.lower(state, batch).compile().as_text()
+    cb = analyze_hlo(txt).collective_bytes
+    return int(sum(v for k, v in cb.items() if k in _SYNC_OPS))
+
+
+def _build_run(rank_schedule: str, decay: float, seq: int, batch: int,
+               total_steps: int) -> RunConfig:
+    return RunConfig(
+        model=get_smoke_config(ARCH),
+        shape=ShapeConfig("b", seq, batch, "train"),
+        lrd=LRDConfig(enabled=True, min_dim=16, rank_quantize=False,
+                      freeze_mode="sequential", rank_schedule=rank_schedule,
+                      rank_decay=decay, rank_min=2),
+        dist=DistConfig(fsdp=False, remat="none"),
+        optim=OptimConfig(name="adamw", lr=1e-3, warmup_steps=0,
+                          total_steps=total_steps, schedule="constant"),
+    )
+
+
+def _train_variant(variant: str, run_cfg: RunConfig, mesh, epochs: int,
+                   steps_per_epoch: int, seed: int):
+    schedule = rank_adapt.schedule_from_config(run_cfg.lrd)
+    params, _ = steps.init_params(run_cfg, jax.random.PRNGKey(seed))
+    state, parked = steps.make_sharded_train_state(run_cfg, params, 0, mesh)
+    train = steps.build_train_step(run_cfg, mesh)
+    data = iter(LMBatchIterator(run_cfg.model.vocab_size, run_cfg.shape.seq_len,
+                                run_cfg.shape.global_batch, seed=seed + 17))
+
+    rows, losses_by_epoch = [], []
+    cur_phase, jitted = 0, None
+    for epoch in range(epochs):
+        phase = epoch % 2
+        if phase != cur_phase:
+            state, parked = steps.repartition_state(
+                run_cfg.optim, state, parked, phase, mesh=mesh, run=run_cfg,
+                schedule=schedule if schedule.active else None,
+                boundary=epoch)
+            cur_phase = phase
+            jitted = None  # ranks may have changed: stale executable
+        if jitted is None:
+            jitted = jax.jit(functools.partial(train, phase=phase))
+        seg_bytes = _partition_bytes(state)
+        total_rank = sum(rank_adapt.live_rank_map(state.params).values())
+        b, s_len = run_cfg.shape.global_batch, run_cfg.shape.seq_len
+        probe = steps.shard_batch(
+            {"tokens": np.zeros((b, s_len), np.int32),
+             "labels": np.zeros((b, s_len), np.int32)}, mesh)
+        sync_b = _sync_bytes(jitted, state, probe, mesh)
+        import time as _t
+        times, losses = [], []
+        for s in range(steps_per_epoch):
+            batch = steps.shard_batch(next(data), mesh)
+            t0 = _t.perf_counter()
+            state, metrics = jitted(state, batch)
+            loss = float(metrics["loss"])  # blocks
+            if s > 0:  # first step of a segment pays the compile
+                times.append(_t.perf_counter() - t0)
+            losses.append(loss)
+        losses_by_epoch.append(losses)
+        rows.append({
+            "arch": ARCH, "variant": variant, "epoch": epoch,
+            "boundary": epoch, "phase": phase, "total_rank": int(total_rank),
+            "us_per_step": float(np.median(times)) * 1e6,
+            "trainable_partition_bytes": int(seg_bytes),
+            "sync_bytes_per_step": int(sync_b),
+            "mean_loss": float(np.mean(losses)),
+        })
+    final_loss = float(np.mean(losses_by_epoch[-1]))
+    return rows, final_loss
+
+
+def run(seq=32, batch=4, steps_per_epoch=8, epochs=4, decay=0.75, seed=0):
+    devs = len(jax.devices())
+    mesh = make_host_mesh(devs, 1)
+    rows = []
+    finals = {}
+    for variant, sched in (("fixed", "none"), ("decay", "decay")):
+        run_cfg = _build_run(sched, decay, seq, batch,
+                             total_steps=epochs * steps_per_epoch)
+        vrows, final = _train_variant(variant, run_cfg, mesh, epochs,
+                                      steps_per_epoch, seed)
+        rows.extend(vrows)
+        finals[variant] = final
+    for variant, final in finals.items():
+        rows.append({"arch": ARCH, "variant": variant, "summary": True,
+                     "final_epoch_loss": final,
+                     "devices": devs, "decay": decay})
+    return rows
+
+
+def main(smoke: bool = True, **kw):
+    rows = run(**kw)
+    print("# rank adaptation: variant/epoch, phase, total_rank, us_per_step, "
+          "trainable_partition_bytes, sync_bytes_per_step, mean_loss")
+    for r in rows:
+        if r.get("summary"):
+            print(f"{r['variant']}: final_epoch_loss {r['final_epoch_loss']:.4f}")
+        else:
+            print(f"{r['variant']}/e{r['epoch']},p{r['phase']},"
+                  f"r{r['total_rank']},{r['us_per_step']:.0f},"
+                  f"{r['trainable_partition_bytes']}B,"
+                  f"{r['sync_bytes_per_step']}B,{r['mean_loss']:.4f}")
+    if smoke:
+        decayed = [r for r in rows
+                   if r["variant"] == "decay" and not r.get("summary")]
+        sizes = [r["trainable_partition_bytes"] for r in decayed]
+        assert all(a > b for a, b in zip(sizes, sizes[1:])), (
+            f"trainable-partition bytes must strictly decrease across "
+            f"phases under the decay schedule, got {sizes}")
+        fixed = next(r["final_epoch_loss"] for r in rows
+                     if r.get("summary") and r["variant"] == "fixed")
+        adapted = next(r["final_epoch_loss"] for r in rows
+                       if r.get("summary") and r["variant"] == "decay")
+        rel = abs(adapted - fixed) / max(abs(fixed), 1e-9)
+        assert rel <= 0.02, (
+            f"rank-adapted final-epoch loss {adapted:.4f} deviates "
+            f"{rel:.1%} (> 2%) from fixed-rank {fixed:.4f}")
+        print(f"smoke OK: bytes strictly decreasing {sizes}, "
+              f"loss delta {rel:.2%} (<= 2%)")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert the acceptance contract (strictly "
+                         "decreasing bytes, <=2% loss delta)")
+    ap.add_argument("--epochs", type=int, default=4)
+    ap.add_argument("--steps-per-epoch", type=int, default=8)
+    ap.add_argument("--decay", type=float, default=0.75)
+    args = ap.parse_args()
+    record("rank_adaptation", main(smoke=args.smoke, epochs=args.epochs,
+                                   steps_per_epoch=args.steps_per_epoch,
+                                   decay=args.decay))

@@ -49,7 +49,7 @@ def main() -> None:
 
     from benchmarks import (fig2_rank_sweep, fig3_freezing_convergence,
                             kernel_microbench, lm_throughput,
-                            serve_throughput, shard_scaling,
+                            rank_adaptation, serve_throughput, shard_scaling,
                             table1_resnet_throughput,
                             table2_decomposition_time, table3_accuracy,
                             table4_vit, train_freezing)
@@ -63,6 +63,10 @@ def main() -> None:
         guard("Train freezing: step walltime + live-state bytes "
               "(partitioned state)",
               train_freezing.main, record_as="train_freezing")
+        guard("Rank adaptation: per-phase shrinking bytes + loss parity "
+              "vs fixed ranks (decaying schedule)",
+              lambda: rank_adaptation.main(smoke=True),
+              record_as="rank_adaptation")
         guard("Shard scaling: per-phase step time + collective bytes vs "
               "device count (8-dev host mesh)",
               shard_scaling.main, record_as="shard_scaling")

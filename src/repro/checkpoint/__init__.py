@@ -1,3 +1,3 @@
-from repro.checkpoint.store import (CheckpointManager, load_checkpoint,  # noqa: F401
-                                    pack_phased_state, save_checkpoint,
-                                    unpack_phased_state)
+from repro.checkpoint.store import (CheckpointManager, live_rank_map,  # noqa: F401
+                                    load_checkpoint, pack_phased_state,
+                                    save_checkpoint, unpack_phased_state)

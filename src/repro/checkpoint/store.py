@@ -66,11 +66,30 @@ def pack_phased_state(state, parked) -> Dict[str, Any]:
             "mu": full_mu, "nu": full_nu}
 
 
-def unpack_phased_state(saved: Dict[str, Any], phase: int):
+def live_rank_map(state) -> Dict[str, int]:
+    """Current ``{factor-group path: rank}`` of a (partitioned or packed)
+    state's params — what the train loop records in the checkpoint ``extra``
+    so a mid-schedule resume (in-training rank adaptation, DESIGN.md §10)
+    can rebuild target shardings at the saved non-uniform ranks and verify
+    them on restore."""
+    from repro.core import rank_adapt
+
+    params = state["params"] if isinstance(state, dict) else state
+    return rank_adapt.live_rank_map(params)
+
+
+def unpack_phased_state(saved: Dict[str, Any], phase: int,
+                        expect_rank_map: Optional[Dict[str, int]] = None):
     """Inverse of :func:`pack_phased_state` for a given freezing phase.
 
     Returns ``((trainable, frozen, (step, mu, nu)), parked)`` — plain
     tuples/trees; the caller rebuilds its typed wrappers and device_puts.
+
+    ``expect_rank_map`` (the manifest's saved rank map) guards a
+    rank-adapted resume: if the restored factor shapes disagree with the
+    recorded map — a half-written manifest, or a resume against the wrong
+    run directory — the mismatch raises here instead of surfacing as a jit
+    shape error thousands of steps later.
     """
     from repro.core import freezing
 
@@ -81,6 +100,16 @@ def unpack_phased_state(saved: Dict[str, Any], phase: int):
             "by a pre-partitioned-TrainState build and cannot be resumed "
             "here; restart from params-only or re-save with "
             "pack_phased_state")
+    if expect_rank_map:
+        got = live_rank_map(saved)
+        expect = {p: int(r) for p, r in expect_rank_map.items()}
+        if {p: got.get(p) for p in expect} != expect:
+            diff = {p: (got.get(p), expect[p]) for p in expect
+                    if got.get(p) != expect[p]}
+            raise ValueError(
+                f"unpack_phased_state: restored factor ranks disagree with "
+                f"the manifest rank map at {diff} (got, expected) — the "
+                f"checkpoint and its rank-adaptation record are out of sync")
     trainable, frozen = freezing.partition(saved["params"], phase)
     (mu, nu), parked = freezing.partition_moments(
         (saved["mu"], saved["nu"]), phase)

@@ -205,6 +205,15 @@ class LRDConfig:
     pallas_block_k: int = 512
     pallas_block_n: int = 256
     pallas_interpret: bool = False
+    # --- in-training rank adaptation (core/rank_adapt.py, DESIGN.md §10) --
+    # Fires at sequential-freezing phase boundaries only; "none" keeps the
+    # decomposition ranks fixed for the whole run (the default paper flow).
+    rank_schedule: str = "none"  # none | decay | energy
+    rank_decay: float = 0.75  # per-boundary rank multiplier (decay policy)
+    rank_energy_threshold: float = 0.98  # kept singular mass (energy policy)
+    rank_min: int = 2  # scheduled ranks never drop below this
+    rank_schedule_tile: int = 128  # MXU tile for scheduled-rank quantization
+    rank_schedule_start: int = 1  # first phase swap that truncates
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,6 +1,8 @@
 """Core contribution of the paper: LRD + rank optimization + sequential freezing."""
 
-from repro.core import decompose, freezing, policy, rank_opt, svd, tucker  # noqa: F401
+from repro.core import (decompose, freezing, policy, rank_adapt, rank_opt,  # noqa: F401
+                        svd, tucker)
+from repro.core.rank_adapt import RankSchedule, schedule_from_config  # noqa: F401
 from repro.core.decompose import Decomposer, DecompositionPlan, apply_lrd  # noqa: F401
 from repro.core.freezing import (FreezeMode, apply_freeze, freeze_mask, merge,  # noqa: F401
                                  partition, phase_for_epoch)

@@ -48,7 +48,8 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["FreezeMode", "factor_group", "freeze_mask", "apply_freeze",
+__all__ = ["FreezeMode", "factor_group", "factor_rank_axis", "freeze_mask",
+           "apply_freeze",
            "partition", "merge", "check_partition",
            "partition_moments", "merge_moments",
            "phase_for_epoch", "frozen_group_for_phase",
@@ -57,6 +58,11 @@ __all__ = ["FreezeMode", "factor_group", "freeze_mask", "apply_freeze",
 # Leaf names of decomposed factors -> group id (see module docstring).
 _SVD_GROUPS = {"u": 0, "v": 1}
 _TUCKER_GROUPS = {"first": 0, "last": 0, "core": 1}
+
+# Which axis of an SVD factor leaf is the rank axis: u is (..., C, r),
+# v is (..., r, S).  The in-training rank adaptation (core.rank_adapt)
+# slices optimizer moments along exactly this axis.
+_SVD_RANK_AXES = {"u": -1, "v": -2}
 
 
 class FreezeMode(str, enum.Enum):
@@ -72,6 +78,12 @@ def factor_group(leaf_name: str) -> int | None:
     if leaf_name in _TUCKER_GROUPS:
         return _TUCKER_GROUPS[leaf_name]
     return None
+
+
+def factor_rank_axis(leaf_name: str) -> int | None:
+    """Rank axis of an SVD factor leaf (``u`` -> -1, ``v`` -> -2), or None
+    for every other param (bias, Tucker factors, ordinary kernels)."""
+    return _SVD_RANK_AXES.get(leaf_name)
 
 
 def phase_for_epoch(epoch: int, mode: FreezeMode | str,

@@ -1,0 +1,277 @@
+"""In-training rank adaptation at freezing-phase boundaries (DESIGN.md §10).
+
+The paper applies its two levers at different times: ranks are fixed when the
+network is decomposed (Algorithm 1) and only shrink again at serve-time
+export, while sequential freezing (Algorithm 2) runs during training.
+Trained Rank Pruning (arXiv 1812.02402) and energy-transfer low-rank
+projection (arXiv 2204.05566) show the ranks themselves can shrink *during*
+training.  This module schedules that shrinkage and anchors it to the one
+place the training loop already rewrites state: the Algorithm-2 phase swap
+(``launch.steps.repartition_state``), where the swapped factor group is
+re-placed anyway.
+
+A :class:`RankSchedule` names the policy:
+
+* ``"decay"``  — every boundary multiplies each group's live rank by
+  ``decay`` (then MXU-tile-quantizes via ``rank_opt.quantize_rank`` and
+  clamps to ``min_rank``).  Deterministic: the whole trajectory is known
+  from the initial ranks alone (:func:`decay_rank_maps`), which is what the
+  dry-run uses for per-phase byte accounting.
+* ``"energy"`` — per group, keep the smallest rank whose singular values of
+  the live product ``U @ V`` retain ``energy_threshold`` of the total
+  squared singular mass (``svd.product_singular_values``); stacked layers
+  take the max over the stack so one shared rank survives.
+
+Truncation itself reuses ``svd.truncate_factors`` — the QR-reduced
+Eckart–Young-optimal re-truncation — on the MERGED param tree, then slices
+the live and host-parked Adam moments to the new rank
+(:func:`slice_moments`), so after ``freezing.partition`` every downstream
+structure (grads, scan accumulators, compression buffers, optimizer state)
+carries the new shapes only and the trainable partition shrinks
+monotonically through training.
+
+Moment-slicing caveat: truncation rotates the factor bases, so the kept
+moment slices are the old moments expressed in old coordinates — a standard
+heuristic (same one LoRA-style re-projection methods use); the alternative,
+zeroing the moments, forgets curvature for the whole group.  The parity
+test layer (tests/test_rank_adapt.py) bounds the resulting loss deviation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import freezing, rank_opt, svd
+from repro.core.decompose import iter_factor_groups, map_factor_groups
+
+__all__ = [
+    "RankSchedule",
+    "schedule_from_config",
+    "live_rank_map",
+    "plan_rank_map",
+    "truncate_params",
+    "slice_tree",
+    "slice_moments",
+    "apply_rank_map_to_shapes",
+    "decay_rank_maps",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class RankSchedule:
+    """Per-boundary rank-shrinkage policy (see module docstring).
+
+    ``start_boundary`` gates the first Algorithm-2 swap that truncates
+    (boundary 1 = the first swap); earlier swaps only rotate the partition.
+    ``tile``/``quantize_mode`` feed ``rank_opt.quantize_rank`` so scheduled
+    ranks stay MXU-aligned at production scale (ranks below one tile pass
+    through unchanged, so smoke-scale schedules decay smoothly).
+    """
+
+    policy: str = "none"  # "none" | "decay" | "energy"
+    decay: float = 0.75  # per-boundary multiplicative target (decay policy)
+    energy_threshold: float = 0.98  # kept squared singular mass (energy)
+    min_rank: int = 2  # never truncate below this
+    tile: int = 128  # MXU tile for quantize_rank
+    quantize_mode: str = "floor"
+    start_boundary: int = 1
+
+    def __post_init__(self):
+        if self.policy not in ("none", "decay", "energy"):
+            raise ValueError(f"unknown rank-schedule policy {self.policy!r}")
+        if self.policy == "decay" and not (0.0 < self.decay < 1.0):
+            raise ValueError(f"decay must be in (0, 1), got {self.decay}")
+        if self.policy == "energy" and not (0.0 < self.energy_threshold <= 1.0):
+            raise ValueError(
+                f"energy_threshold must be in (0, 1], got {self.energy_threshold}")
+        if self.min_rank < 1:
+            raise ValueError(f"min_rank must be >= 1, got {self.min_rank}")
+
+    @property
+    def active(self) -> bool:
+        return self.policy != "none"
+
+
+def schedule_from_config(lrd) -> RankSchedule:
+    """Build the schedule from an ``LRDConfig`` (``lrd.rank_schedule`` etc.)."""
+    return RankSchedule(
+        policy=lrd.rank_schedule,
+        decay=lrd.rank_decay,
+        energy_threshold=lrd.rank_energy_threshold,
+        min_rank=lrd.rank_min,
+        tile=lrd.rank_schedule_tile,
+        start_boundary=lrd.rank_schedule_start,
+    )
+
+
+def live_rank_map(params: Any) -> Dict[str, int]:
+    """``{group_path: current rank}`` for every SVD factor group.
+
+    Works on concrete arrays and ``ShapeDtypeStruct`` trees alike — the rank
+    is the trailing dim of ``u``.  This is the map the checkpoint manifest
+    persists so a mid-schedule resume restores non-uniform ranks.
+    """
+    return {path: int(g["u"].shape[-1]) for path, g in iter_factor_groups(params)}
+
+
+def _quantized(schedule: RankSchedule, target: int, current: int) -> int:
+    t = rank_opt.quantize_rank(max(int(target), 1), tile=schedule.tile,
+                               mode=schedule.quantize_mode)
+    t = max(schedule.min_rank, t)
+    return min(t, current)
+
+
+def _decay_target(schedule: RankSchedule, rank: int) -> int:
+    return _quantized(schedule, math.floor(rank * schedule.decay), rank)
+
+
+def _energy_target(schedule: RankSchedule, u, v) -> int:
+    rank = int(u.shape[-1])
+    s = np.asarray(svd.product_singular_values(u, v), np.float64)
+    s2 = s.reshape(-1, s.shape[-1]) ** 2  # (stack, r)
+    frac = np.cumsum(s2, axis=-1) / np.maximum(
+        np.sum(s2, axis=-1, keepdims=True), 1e-30)
+    # smallest r' keeping >= threshold of the mass, max over stacked layers
+    # (one shared rank per stacked group — matches svd_decompose's layout);
+    # a row that never reaches the threshold (fp roundoff near 1.0) keeps
+    # full rank rather than argmax-of-all-False collapsing it to rank 1
+    hit = frac >= schedule.energy_threshold
+    per_row = np.where(hit.any(axis=-1), hit.argmax(axis=-1) + 1, rank)
+    return _quantized(schedule, int(per_row.max()), rank)
+
+
+def plan_rank_map(params: Any, schedule: RankSchedule,
+                  boundary: Optional[int] = None) -> Dict[str, int]:
+    """``{group_path: new_rank}`` for groups the schedule truncates NOW.
+
+    Only strictly-shrinking entries appear; an inactive schedule or a
+    boundary before ``start_boundary`` plans nothing.  Policies are relative
+    to the LIVE ranks, so the plan composes across resumes without a
+    boundary counter in the checkpoint.
+    """
+    if not schedule.active:
+        return {}
+    if boundary is not None and boundary < schedule.start_boundary:
+        return {}
+    plan: Dict[str, int] = {}
+    for path, g in iter_factor_groups(params):
+        rank = int(g["u"].shape[-1])
+        if schedule.policy == "decay":
+            target = _decay_target(schedule, rank)
+        else:
+            target = _energy_target(schedule, g["u"], g["v"])
+        if target < rank:
+            plan[path] = target
+    return plan
+
+
+def truncate_params(params: Any, rank_map: Dict[str, int], *,
+                    balance: str = "balanced") -> Any:
+    """Eckart–Young-truncate every planned factor group to its new rank.
+
+    ``svd.truncate_factors`` rewrites the (u, v) pair jointly (QR-reduced,
+    never touching a C x S matrix), so BOTH factors change — the caller must
+    re-place both partitions' slices of a truncated group.
+    """
+
+    def rewrite(path, group):
+        rank = rank_map.get(path)
+        if rank is None or rank >= group["u"].shape[-1]:
+            return group
+        u2, v2 = svd.truncate_factors(group["u"], group["v"], int(rank),
+                                      balance=balance)
+        out = dict(group)
+        out["u"], out["v"] = u2, v2
+        return out
+
+    return map_factor_groups(params, rewrite)
+
+
+def slice_tree(tree: Any, rank_map: Dict[str, int]) -> Any:
+    """Slice the rank dims of a params-shaped tree to the map's new ranks.
+
+    Used for optimizer moments (live jax arrays AND host-parked numpy — a
+    numpy slice is a view, no copy) and any other per-param buffer.  The
+    rank axis per factor leaf comes from ``freezing.factor_rank_axis``
+    (u: last, v: second-to-last); ``bias`` and non-factor leaves pass
+    through, as do ``None`` partition holes.
+    """
+
+    def walk(t, path):
+        if isinstance(t, dict):
+            return {k: walk(v, f"{path}/{k}" if path else k)
+                    for k, v in t.items()}
+        if t is None:
+            return None
+        parent, _, name = path.rpartition("/")
+        rank = rank_map.get(parent)
+        axis = freezing.factor_rank_axis(name)
+        if rank is None or axis is None:
+            return t
+        if axis == -1:
+            return t[..., :int(rank)]
+        return t[..., :int(rank), :]
+
+    return walk(tree, "")
+
+
+def slice_moments(moments: Tuple[Any, Any],
+                  rank_map: Dict[str, int]) -> Tuple[Any, Any]:
+    """Slice full ``(mu, nu)`` moment trees to the new ranks (``nu`` may be
+    ``()`` for SGD and passes through)."""
+    mu, nu = moments
+    return (slice_tree(mu, rank_map),
+            nu if nu == () else slice_tree(nu, rank_map))
+
+
+def apply_rank_map_to_shapes(shapes: Any, rank_map: Dict[str, int]) -> Any:
+    """Rewrite a ``ShapeDtypeStruct`` tree to the map's ranks (no data).
+
+    The abstract-state path: ``steps.abstract_state(rank_map=...)`` and
+    ``steps.packed_state_shardings(rank_map=...)`` resolve shardings against
+    truncated shapes for dry-run accounting and elastic restore.
+    """
+    import jax
+
+    if not rank_map:
+        return shapes
+
+    def rewrite(path, group):
+        rank = rank_map.get(path)
+        if rank is None:
+            return group
+        rank = int(rank)
+        u, v = group["u"], group["v"]
+        if rank >= u.shape[-1]:
+            return group
+        out = dict(group)
+        out["u"] = jax.ShapeDtypeStruct(u.shape[:-1] + (rank,), u.dtype)
+        out["v"] = jax.ShapeDtypeStruct(v.shape[:-2] + (rank,) + v.shape[-1:],
+                                        v.dtype)
+        return out
+
+    return map_factor_groups(shapes, rewrite)
+
+
+def decay_rank_maps(params_or_shapes: Any, schedule: RankSchedule,
+                    boundaries: int) -> List[Dict[str, int]]:
+    """Analytic rank trajectory: the FULL rank map after each of the first
+    ``boundaries`` phase swaps under the decay policy.
+
+    Needs only shapes (the decay target is rank-arithmetic), so the dry-run
+    prices per-phase shrinking bytes without real factors.  The energy
+    policy depends on trained singular values and has no analytic
+    trajectory — dry-run accounting falls back to this decay estimate.
+    """
+    current = live_rank_map(params_or_shapes)
+    maps: List[Dict[str, int]] = []
+    for b in range(1, boundaries + 1):
+        if schedule.active and b >= schedule.start_boundary:
+            current = {p: _decay_target(schedule, r)
+                       for p, r in current.items()}
+        maps.append(dict(current))
+    return maps

@@ -31,6 +31,7 @@ __all__ = [
     "svd_decompose",
     "randomized_svd",
     "truncate_factors",
+    "product_singular_values",
     "reconstruction_error",
     "max_rank",
 ]
@@ -161,6 +162,34 @@ def truncate_factors(
         u2 = u2.reshape(lead_u + u2.shape[-2:])
         v2 = v2.reshape(lead_v + v2.shape[-2:])
     return u2.astype(u.dtype), v2.astype(v.dtype)
+
+
+@jax.jit
+def _product_singular_values_2d(u: jax.Array, v: jax.Array) -> jax.Array:
+    uf, vf = u.astype(jnp.float32), v.astype(jnp.float32)
+    _, ru = jnp.linalg.qr(uf)
+    _, rv = jnp.linalg.qr(vf.T)
+    return jnp.linalg.svd(ru @ rv.T, compute_uv=False)
+
+
+def product_singular_values(u: jax.Array, v: jax.Array) -> jax.Array:
+    """Singular values of ``U @ V`` via the same QR reduction as
+    :func:`truncate_factors` — O(r²(C+S) + r³), never forming ``U V``.
+
+    The spectrum the energy-threshold rank schedule
+    (``core.rank_adapt``) reads to decide how much rank a trained group
+    still needs.  Stacked factors return per-stack spectra ``(..., r)``.
+    """
+    if u.ndim < 2:
+        raise ValueError(
+            f"product_singular_values expects >= 2-D factors, got {u.shape}")
+    if u.ndim == 2:
+        return _product_singular_values_2d(u, v)
+    lead = u.shape[:-2]
+    uf = u.reshape((-1,) + u.shape[-2:])
+    vf = v.reshape((-1,) + v.shape[-2:])
+    s = jax.vmap(_product_singular_values_2d)(uf, vf)
+    return s.reshape(lead + s.shape[-1:])
 
 
 def reconstruction_error(w: jax.Array, u: jax.Array, v: jax.Array) -> jax.Array:

@@ -9,5 +9,6 @@ from repro.distributed.sharding import (  # noqa: F401
     current_mesh,
     named_shardings,
     param_specs,
+    place_at_paths,
     shard,
 )

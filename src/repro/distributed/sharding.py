@@ -291,6 +291,37 @@ def param_specs(params: Any, mesh: Optional[Mesh] = None,
     return walk(params, "")
 
 
+def place_at_paths(tree: Any, mesh: Mesh, rules: RuleTable,
+                   paths: Sequence[str]) -> Any:
+    """device_put only the leaves under the given subtree paths to their
+    rule-resolved ``NamedSharding``; every other leaf passes through
+    untouched.
+
+    The surgical-re-placement primitive of in-training rank adaptation
+    (``launch.steps.repartition_state``): a truncated factor group's leaves
+    are brand-new arrays with default placement, and — unlike a plain phase
+    swap — BOTH factors of the group changed shape, so re-placement is by
+    group *path*, not by factor group id.  Specs are resolved against the
+    tree's CURRENT (post-truncation) shapes, so divisibility fallbacks
+    re-apply at the new ranks.
+    """
+    specs = param_specs(tree, mesh, rules)
+    prefixes = tuple(paths)
+
+    def covered(path: str) -> bool:
+        return any(path == p or path.startswith(p + "/") for p in prefixes)
+
+    def walk(t, s, path):
+        if isinstance(t, dict):
+            return {k: walk(v, s[k], f"{path}/{k}" if path else k)
+                    for k, v in t.items()}
+        if t is None or s is None or not covered(path):
+            return t
+        return jax.device_put(t, NamedSharding(mesh, s))
+
+    return walk(tree, specs, "")
+
+
 def named_shardings(params: Any, mesh: Optional[Mesh] = None,
                     rules: Optional[RuleTable] = None) -> Any:
     """``NamedSharding`` pytree for a param tree (``param_specs`` + mesh).

@@ -31,7 +31,8 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool, lrd: bool,
                freeze: bool, fsdp: bool = True, remat: str = "sqrt",
                microbatches: int = 0, grad_compression: str = "none",
                param_layout: str = "fsdp", capacity_factor: float = 0.0,
-               attn_blocks: str = "", kv_int8: bool = False):
+               attn_blocks: str = "", kv_int8: bool = False,
+               rank_schedule: str = "none", rank_decay: float = 0.75):
     """Build (fn, args, mesh, run) for one dry-run cell."""
     import jax
     import jax.numpy as jnp
@@ -67,7 +68,8 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool, lrd: bool,
         model=cfg,
         shape=shape,
         lrd=LRDConfig(enabled=lrd, alpha=2.0, rank_quantize=True,
-                      freeze_mode="sequential" if freeze else "none"),
+                      freeze_mode="sequential" if freeze else "none",
+                      rank_schedule=rank_schedule, rank_decay=rank_decay),
         dist=DistConfig(param_layout=param_layout,
                         fsdp=fsdp, remat=remat if shape.kind == "train" else "none",
                         # decode: shard the KV cache sequence over the model
@@ -118,9 +120,53 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool, lrd: bool,
     return fn, args, mesh, run, donate
 
 
+def rank_adaptation_trajectory(run, mesh, boundaries: int) -> list:
+    """Per-boundary STRUCTURAL byte accounting of an in-training rank
+    schedule (DESIGN.md §10): live trainable/frozen/opt stand-in bytes of
+    the abstract state after each phase swap, under the decay trajectory
+    (``rank_adapt.decay_rank_maps`` — the energy policy has no analytic
+    trajectory and is priced with the same decay estimate).  No allocation,
+    no compile: pure eval_shape arithmetic, so every cell can afford it.
+    """
+    import jax
+    import numpy as np
+
+    from repro.core import rank_adapt
+    from repro.launch import steps
+
+    def tree_bytes(tree):
+        return sum(int(np.prod(l.shape)) * jnp_itemsize(l.dtype)
+                   for l in jax.tree_util.tree_leaves(tree))
+
+    def jnp_itemsize(dtype):
+        return np.dtype(dtype).itemsize
+
+    schedule = rank_adapt.schedule_from_config(run.lrd)
+    shapes = jax.eval_shape(lambda: steps.init_params(run)[0])
+    maps = [None] + rank_adapt.decay_rank_maps(shapes, schedule, boundaries)
+    rows = []
+    for b, rmap in enumerate(maps):
+        phase = b % 2  # sequential alternation starts at phase 0
+        a = steps.abstract_state(run, mesh, phase=phase, rank_map=rmap)
+        opt_bytes = tree_bytes(a.opt.mu) + (
+            tree_bytes(a.opt.nu) if a.opt.nu != () else 0)
+        rmap_now = rmap if rmap is not None else rank_adapt.live_rank_map(shapes)
+        rows.append({
+            "boundary": b,
+            "phase": phase,
+            "total_rank": int(sum(rmap_now.values())),
+            "trainable_param_bytes": tree_bytes(a.trainable),
+            "frozen_param_bytes": tree_bytes(a.frozen),
+            "opt_bytes": opt_bytes,
+            "trainable_partition_bytes": tree_bytes(a.trainable) + opt_bytes,
+        })
+    return rows
+
+
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool, lrd: bool = True,
              freeze: bool = True, out_dir: Path = DEFAULT_OUT, tag: str = "",
-             save_hlo: bool = True, **build_kw) -> dict:
+             save_hlo: bool = True, rank_boundaries: int = 4,
+             **build_kw) -> dict:
     import jax
 
     t0 = time.time()
@@ -162,6 +208,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, lrd: bool = True,
             "transcendentals": float(cost.get("transcendentals", -1.0)),
         },
     }
+    if (run.lrd.rank_schedule != "none" and run.shape.kind == "train"
+            and rank_boundaries > 0):
+        result["rank_adaptation"] = rank_adaptation_trajectory(
+            run, mesh, rank_boundaries)
 
     out_dir.mkdir(parents=True, exist_ok=True)
     stem = f"{arch}__{shape_name}__{mesh_tag}__{variant}"
@@ -259,6 +309,13 @@ def main():
     ap.add_argument("--capacity-factor", type=float, default=0.0)
     ap.add_argument("--attn-blocks", default="", help="bq,bkv override")
     ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--rank-schedule", default="none",
+                    choices=["none", "decay", "energy"],
+                    help="price an in-training rank schedule (per-boundary "
+                         "shrinking-bytes trajectory in the cell JSON)")
+    ap.add_argument("--rank-decay", type=float, default=0.75)
+    ap.add_argument("--rank-boundaries", type=int, default=4,
+                    help="phase swaps to price in the trajectory")
     ap.add_argument("--tag", default="")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true")
@@ -279,7 +336,10 @@ def main():
                        grad_compression=args.grad_compression,
                        param_layout=args.param_layout,
                        capacity_factor=args.capacity_factor,
-                       attn_blocks=args.attn_blocks, kv_int8=args.kv_int8)
+                       attn_blocks=args.attn_blocks, kv_int8=args.kv_int8,
+                       rank_schedule=args.rank_schedule,
+                       rank_decay=args.rank_decay,
+                       rank_boundaries=args.rank_boundaries)
     except SystemExit as e:
         print(e)
         return

@@ -40,12 +40,13 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import RunConfig
-from repro.core import freezing
+from repro.core import freezing, rank_adapt
 from repro.core.decompose import Decomposer
 from repro.core.policy import LM_DEFAULT, NO_LRD
 from repro.distributed import (ACT_RULES, ACT_RULES_SP, FROZEN_PARAM_RULES,
                                PARAM_RULES, PARAM_RULES_NO_FSDP, axis_rules,
-                               named_shardings, param_specs, shard)
+                               named_shardings, param_specs, place_at_paths,
+                               shard)
 from repro.distributed.compression import value_and_grad_compressed
 from repro.kernels.ops import KernelPolicy
 from repro.models import encdec as encdec_mod, lm
@@ -107,7 +108,8 @@ def _unpark(tree, mesh=None, rules=None):
 
 
 def repartition_state(optim_cfg, state: TrainState, parked, new_phase: int,
-                      *, mesh=None, run: Optional[RunConfig] = None):
+                      *, mesh=None, run: Optional[RunConfig] = None,
+                      schedule=None, boundary: Optional[int] = None):
     """Host-side Algorithm-2 phase transition.
 
     Re-partitions the merged params for ``new_phase`` and rotates the
@@ -118,6 +120,16 @@ def repartition_state(optim_cfg, state: TrainState, parked, new_phase: int,
     and parked slices never sit in device memory.  Call it between steps,
     outside jit.
 
+    With ``schedule`` (a ``core.rank_adapt.RankSchedule``) the swap also
+    fires the in-training rank adaptation (DESIGN.md §10): groups whose
+    scheduled target sits below their live rank are Eckart–Young-truncated
+    on the MERGED params (``svd.truncate_factors``) and BOTH the live and
+    parked Adam-moment slices are cut to the new rank BEFORE the partition
+    is rebuilt — so grads, scan accumulators, compression buffers, and the
+    optimizer state all carry the new shapes only, and the trainable
+    partition shrinks monotonically.  ``boundary`` (the swap index) gates
+    ``schedule.start_boundary``.
+
     With ``mesh`` (and ``run`` for the rule tables) the swap is
     SHARD-AWARE (DESIGN.md §9): the two partitions live under different
     placements (trainable: FSDP/TP param rules; frozen:
@@ -126,14 +138,22 @@ def repartition_state(optim_cfg, state: TrainState, parked, new_phase: int,
     their new placement; every other param/moment buffer is untouched —
     a phase swap never resets the sharding (or the contents) of the rest
     of the state.  Unparked moments are placed directly with their target
-    opt-layout sharding.
+    opt-layout sharding.  A truncated group is the one exception: both its
+    factors are fresh arrays, so its params AND moments are re-placed by
+    group path (``distributed.place_at_paths``), re-resolving divisibility
+    at the new ranks.
     """
     old_phase = freezing.phase_of_partition(state.trainable, state.frozen)
     params = freezing.merge(state.trainable, state.frozen)
+    moments = freezing.merge_moments((state.opt.mu, state.opt.nu), parked)
+    trunc = {}
+    if schedule is not None and schedule.active:
+        trunc = rank_adapt.plan_rank_map(params, schedule, boundary)
+        if trunc:
+            params = rank_adapt.truncate_params(params, trunc)
+            moments = rank_adapt.slice_moments(moments, trunc)
     trainable, frozen = freezing.partition(params, new_phase)
-    active, parked = freezing.partition_moments(
-        freezing.merge_moments((state.opt.mu, state.opt.nu), parked),
-        new_phase)
+    active, parked = freezing.partition_moments(moments, new_phase)
     if mesh is None or mesh.devices.size <= 1:
         opt = OptState(state.opt.step, *(_unpark(t) for t in active))
         return (TrainState(trainable, frozen, opt),
@@ -147,8 +167,15 @@ def repartition_state(optim_cfg, state: TrainState, parked, new_phase: int,
     frozen = _place_moved(frozen,
                           named_shardings(frozen, mesh, FROZEN_PARAM_RULES),
                           moved)
-    opt = OptState(state.opt.step,
-                   *(_unpark(t, mesh, opt_rules) for t in active))
+    mu, nu = (_unpark(t, mesh, opt_rules) for t in active)
+    if trunc:
+        paths = tuple(trunc)
+        trainable = place_at_paths(trainable, mesh, prm, paths)
+        frozen = place_at_paths(frozen, mesh, FROZEN_PARAM_RULES, paths)
+        mu = place_at_paths(mu, mesh, opt_rules, paths)
+        if nu != ():
+            nu = place_at_paths(nu, mesh, opt_rules, paths)
+    opt = OptState(state.opt.step, mu, nu)
     return TrainState(trainable, frozen, opt), tuple(_park(t) for t in parked)
 
 
@@ -230,7 +257,8 @@ def make_sharded_train_state(run: RunConfig, params, phase: int, mesh):
                        place(state.frozen, shs.frozen), opt), parked)
 
 
-def packed_state_shardings(run: RunConfig, mesh, phase: int):
+def packed_state_shardings(run: RunConfig, mesh, phase: int,
+                           rank_map: Optional[Dict[str, int]] = None):
     """Target shardings for a ``pack_phased_state`` checkpoint tree.
 
     The elastic-resume placement map (``checkpoint.load_checkpoint``'s
@@ -240,8 +268,16 @@ def packed_state_shardings(run: RunConfig, mesh, phase: int):
     so those leaves stay host numpy through the restore — the saved tree
     was written mesh-agnostically, so this works across any source/target
     mesh pair.
+
+    ``rank_map`` is the checkpoint's live rank map (saved in the manifest
+    ``extra`` once a rank schedule has truncated): the eval_shape tree is
+    rewritten to those non-uniform ranks before specs resolve, so a
+    mid-schedule resume shards truncated factors by their SAVED shapes, not
+    the config's initial ranks.
     """
     shapes = jax.eval_shape(lambda: init_params(run)[0])
+    if rank_map:
+        shapes = rank_adapt.apply_rank_map_to_shapes(shapes, rank_map)
     trainable, frozen = freezing.partition(shapes, phase)
     params_sh = freezing.merge(
         named_shardings(trainable, mesh, _param_rules(run)),
@@ -609,7 +645,8 @@ def run_phase(run: RunConfig, epoch: int = 0) -> int:
                                     run.lrd.epochs_per_phase)
 
 
-def abstract_state(run: RunConfig, mesh, phase: Optional[int] = None):
+def abstract_state(run: RunConfig, mesh, phase: Optional[int] = None,
+                   rank_map: Optional[Dict[str, int]] = None):
     """Abstract partitioned TrainState: eval_shape over init + shardings.
 
     The optimizer-state stand-ins cover the trainable partition only, so
@@ -618,11 +655,16 @@ def abstract_state(run: RunConfig, mesh, phase: Optional[int] = None):
     stand-ins carry the ``FROZEN_PARAM_RULES`` placement (replicated over
     DP — DESIGN.md §9), so the same analysis reports the frozen partition's
     replication cost honestly.  ``phase`` defaults to the run's epoch-0
-    phase.
+    phase.  ``rank_map`` rewrites factor groups to scheduled (possibly
+    non-uniform) ranks first — the dry-run prices each rank-adaptation
+    boundary by passing the trajectory maps from
+    ``rank_adapt.decay_rank_maps`` here.
     """
     if phase is None:
         phase = run_phase(run)
     shapes = jax.eval_shape(lambda: init_params(run)[0])
+    if rank_map:
+        shapes = rank_adapt.apply_rank_map_to_shapes(shapes, rank_map)
     trainable_s, frozen_s = freezing.partition(shapes, phase)
     trainable = _attach_shardings(trainable_s, mesh, _param_rules(run))
     frozen = _attach_shardings(frozen_s, mesh, FROZEN_PARAM_RULES)

@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.checkpoint import (CheckpointManager, pack_phased_state,
                               unpack_phased_state)
+from repro.core import rank_adapt
 from repro.configs import SHAPES, get_config, get_smoke_config
 from repro.configs.base import (DistConfig, LRDConfig, OptimConfig, RunConfig,
                                 ShapeConfig)
@@ -92,7 +93,11 @@ def build_run(args) -> RunConfig:
                       freeze_mode=args.freeze, min_dim=args.lrd_min_dim,
                       epochs_per_phase=args.epochs_per_phase,
                       use_pallas_kernel=args.use_pallas,
-                      pallas_interpret=args.pallas_interpret),
+                      pallas_interpret=args.pallas_interpret,
+                      rank_schedule=args.rank_schedule,
+                      rank_decay=args.rank_decay,
+                      rank_energy_threshold=args.rank_energy,
+                      rank_min=args.rank_min),
         dist=DistConfig(fsdp=args.fsdp, remat=args.remat,
                         microbatches=args.microbatches,
                         grad_compression=args.grad_compression),
@@ -120,6 +125,16 @@ def main(argv=None):
                     choices=["none", "regular", "sequential"])
     ap.add_argument("--epochs-per-phase", type=int, default=1,
                     help="Algorithm-2 alternation cadence (sequential)")
+    ap.add_argument("--rank-schedule", default="none",
+                    choices=["none", "decay", "energy"],
+                    help="in-training rank adaptation at phase boundaries "
+                         "(DESIGN.md §10; needs --freeze sequential)")
+    ap.add_argument("--rank-decay", type=float, default=0.75,
+                    help="per-boundary rank multiplier (decay policy)")
+    ap.add_argument("--rank-energy", type=float, default=0.98,
+                    help="kept singular-value mass (energy policy)")
+    ap.add_argument("--rank-min", type=int, default=2,
+                    help="scheduled ranks never drop below this")
     ap.add_argument("--use-pallas", action="store_true",
                     help="fused low-rank kernels, fwd+bwd (TPU; with "
                          "--pallas-interpret also CPU validation)")
@@ -156,6 +171,10 @@ def main(argv=None):
     params, plan = steps_mod.init_params(run)
     if run.lrd.enabled:
         print(plan.summary())
+    schedule = rank_adapt.schedule_from_config(run.lrd)
+    if schedule.active and run.lrd.freeze_mode != "sequential":
+        print("[rank-adapt] --rank-schedule set but freezing is not "
+              "sequential: no phase boundaries, schedule never fires")
 
     def phase_at(step: int) -> int:
         return steps_mod.run_phase(run, step // args.steps_per_epoch)
@@ -179,14 +198,20 @@ def main(argv=None):
     if ckpt.latest_step() is not None:
         # elastic resume: the checkpoint is mesh-agnostic; place every leaf
         # directly under the CURRENT mesh's shardings (parked moment slices
-        # carry no sharding and stay host numpy)
-        saved_phase = int(ckpt.peek_extra().get("phase", -1))
+        # carry no sharding and stay host numpy).  The saved rank map
+        # rebuilds target shardings at the checkpoint's possibly-truncated,
+        # non-uniform ranks (DESIGN.md §10).
+        peeked = ckpt.peek_extra()
+        saved_phase = int(peeked.get("phase", -1))
+        saved_ranks = peeked.get("rank_map")
         restored = ckpt.restore(
-            shardings=steps_mod.packed_state_shardings(run, mesh, saved_phase))
+            shardings=steps_mod.packed_state_shardings(
+                run, mesh, saved_phase, rank_map=saved_ranks))
     if restored is not None:
         saved_state, start_step, extra = restored
         cur_phase = int(extra.get("phase", -1))
-        (tr, fr, opt_r), parked_h = unpack_phased_state(saved_state, cur_phase)
+        (tr, fr, opt_r), parked_h = unpack_phased_state(
+            saved_state, cur_phase, expect_rank_map=extra.get("rank_map"))
         state = steps_mod.TrainState(tr, fr, OptState(*opt_r))
         parked = tuple(jax.tree_util.tree_map(np.asarray, t) for t in parked_h)
         data.load_state_dict(extra["data"])
@@ -221,12 +246,27 @@ def main(argv=None):
         if phase != cur_phase:
             # Algorithm-2 phase swap: repartition params and rotate the
             # parked optimizer moments (host-side; only the swapped factor
-            # group's leaves are re-placed — DESIGN.md §9)
+            # group's leaves are re-placed — DESIGN.md §9).  With an active
+            # rank schedule the same swap truncates scheduled factor groups
+            # and slices their moments (DESIGN.md §10).
+            ranks_before = rank_adapt.live_rank_map(state.params)
             state, parked = steps_mod.repartition_state(
-                run.optim, state, parked, phase, mesh=mesh, run=run)
+                run.optim, state, parked, phase, mesh=mesh, run=run,
+                schedule=schedule if schedule.active else None,
+                boundary=epoch // max(args.epochs_per_phase, 1))
             cur_phase = phase
             print(f"[phase] epoch {epoch}: now training group {1 - phase}, "
                   f"group {phase} frozen out of the step")
+            ranks_after = rank_adapt.live_rank_map(state.params)
+            if ranks_after != ranks_before:
+                # shapes changed: every cached executable (and its
+                # in_shardings, resolved against the OLD shapes) is stale
+                step_fns.clear()
+                shrunk = {p: f"{ranks_before[p]}->{r}"
+                          for p, r in ranks_after.items()
+                          if r != ranks_before[p]}
+                print(f"[rank-adapt] boundary truncated {len(shrunk)} "
+                      f"group(s): {shrunk}")
         batch = steps_mod.shard_batch(next(it), mesh)
         t0 = time.perf_counter()
         state, metrics = fn_for(phase, batch)(state, batch)
@@ -245,7 +285,8 @@ def main(argv=None):
         if ckpt.due(step + 1) and ckpt.maybe_save(
                 step + 1, pack_phased_state(state, parked),
                 extra={"data": data.state_dict(), "phase": phase,
-                       "mesh": mesh_info}):
+                       "mesh": mesh_info,
+                       "rank_map": rank_adapt.live_rank_map(state.params)}):
             if ckpt.preempted:
                 print(f"[preempt] checkpointed at step {step + 1}, exiting")
                 return state, losses

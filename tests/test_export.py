@@ -176,6 +176,83 @@ def test_export_roundtrip_checkpoint_and_logits_tolerance():
         np.testing.assert_array_equal(np.asarray(lg_rt), np.asarray(lg_exp))
 
 
+def test_export_from_rank_adapted_checkpoint():
+    """Satellite (DESIGN.md §10): a rank-adapted checkpoint carries
+    NON-UNIFORM per-layer ranks; export must truncate/merge from the live
+    (adapted) ranks, round-trip through checkpoint/store.py, stay within
+    logits tolerance of the per-group SVD reference, and drop into the
+    paged serving engine unchanged."""
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+    from repro.checkpoint.store import latest_checkpoint, live_rank_map
+    from repro.core import rank_adapt
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import lm as lm_mod
+    from repro.serving import ServeEngine
+
+    cfg, run, params = _lrd_params(seed=6)
+    ranks = rank_adapt.live_rank_map(params)
+    # shrink every other group by a varying fraction: genuinely non-uniform
+    rank_map = {p: max(2, r * (1 + i % 3) // 4)
+                for i, (p, r) in enumerate(sorted(ranks.items()))
+                if i % 2 == 0}
+    adapted = rank_adapt.truncate_params(params, rank_map)
+    new_ranks = rank_adapt.live_rank_map(adapted)
+    assert len(set(new_ranks.values())) > 2, new_ranks
+    assert any(new_ranks[p] != ranks[p] for p in ranks)
+
+    exported, report = export_for_serving(adapted, backend="analytic-tpu")
+    for path, lay in report.layers.items():
+        assert lay.rank_train == new_ranks[path]  # export saw adapted ranks
+        if not lay.merged:
+            assert lay.rank_serve <= new_ranks[path]
+
+    def ref_group(path, group):
+        lay = report.layers[path]
+        w = jnp.matmul(group["u"].astype(jnp.float32),
+                       group["v"].astype(jnp.float32))
+        if lay.merged:
+            out = {"kernel": w.astype(group["u"].dtype)}
+        else:
+            u2, v2 = svd.svd_decompose(w, lay.rank_serve)
+            out = {"u": u2.astype(group["u"].dtype),
+                   "v": v2.astype(group["v"].dtype)}
+        if "bias" in group:
+            out["bias"] = group["bias"]
+        return out
+
+    reference = map_factor_groups(adapted, ref_group)
+    toks = jax.random.randint(jax.random.PRNGKey(11), (2, 16), 0,
+                              cfg.vocab_size)
+    lg_exp, _, _ = lm_mod.lm_apply(exported, toks, cfg, mode="full")
+    lg_ref, _, _ = lm_mod.lm_apply(reference, toks, cfg, mode="full")
+    scale = float(np.abs(np.asarray(lg_ref, np.float32)).max()) + 1e-9
+    rel = np.abs(np.asarray(lg_exp, np.float32)
+                 - np.asarray(lg_ref, np.float32)).max() / scale
+    assert rel < 5e-3, rel
+
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 2, {"params": exported},
+                        extra={"rank_map": new_ranks})
+        restored, step, extra = load_checkpoint(latest_checkpoint(d))
+        assert step == 2
+        assert ({p: int(r) for p, r in extra["rank_map"].items()}
+                == new_ranks)
+        # merged groups leave the factor map; surviving ones keep their
+        # (non-uniform) serve ranks
+        restored_map = live_rank_map(restored)
+        for path, r in restored_map.items():
+            assert r == report.layers[path].rank_serve, path
+        eng = ServeEngine(run, jax.tree_util.tree_map(
+            jnp.asarray, restored["params"]), make_host_mesh(1, 1),
+            max_len=24, num_slots=2, prefill_len=12, block_size=4)
+        outs = eng.serve([{"prompt": np.arange(1, 9, dtype=np.int32),
+                           "max_new": 4},
+                          {"prompt": np.arange(3, 13, dtype=np.int32),
+                           "max_new": 6}])
+        assert [len(o) for o in outs] == [4, 6]
+        assert eng.scheduler.decode_compiles == 1
+
+
 def test_exported_params_serve_through_scheduler():
     """The exported (partly merged, partly truncated) tree drops into the
     continuous-batching engine unchanged."""

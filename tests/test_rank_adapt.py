@@ -1,0 +1,372 @@
+"""In-training rank adaptation (DESIGN.md §10): the parity/invariant test
+layer for core/rank_adapt.py.
+
+* parity — Eckart–Young-truncating a TRAINED factor group to rank r at a
+  phase boundary lands within 1e-4 of decomposing fresh at rank r from the
+  same merged weight (per-group products and end-to-end loss);
+* optimality — ``svd.truncate_factors`` is Eckart–Young-optimal on random
+  factor pairs (matches the SVD-of-the-product error, beats naive
+  column dropping, error monotone in rank);
+* invariants — after a scheduled truncation fires inside
+  ``repartition_state``, every downstream structure (optimizer moments,
+  parked host slices, microbatch scan accumulators, the whole traced step)
+  carries the NEW rank shapes only, and the trainable partition shrinks
+  monotonically across swaps;
+* checkpoint — the live rank map round-trips through the manifest and the
+  ``expect_rank_map`` restore guard fails fast on a mismatch.
+
+Schedule-policy unit tests (gating, decay/energy targets, slicing, shape
+rewrites, the analytic decay trajectory) ride along.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import (DistConfig, LRDConfig, OptimConfig, RunConfig,
+                                ShapeConfig)
+from repro.core import freezing, rank_adapt, svd
+from repro.core.decompose import iter_factor_groups, map_factor_groups
+from repro.core.rank_adapt import RankSchedule
+from repro.launch import steps
+from repro.launch.mesh import make_host_mesh
+
+
+def _train_run(microbatches=1, rank_schedule="none", decay=0.75):
+    return RunConfig(
+        model=get_smoke_config("smollm-360m"),
+        shape=ShapeConfig("b", 32, 4, "train"),
+        lrd=LRDConfig(enabled=True, min_dim=16, rank_quantize=False,
+                      freeze_mode="sequential", rank_schedule=rank_schedule,
+                      rank_decay=decay, rank_min=2),
+        dist=DistConfig(fsdp=False, remat="none", microbatches=microbatches),
+        optim=OptimConfig(name="adamw", lr=1e-2, warmup_steps=0,
+                          total_steps=100, schedule="constant"),
+    )
+
+
+def _batch(run, seed=0):
+    rng = np.random.default_rng(seed)
+    b, s = run.shape.global_batch, run.shape.seq_len
+    return {"tokens": rng.integers(0, run.model.vocab_size, (b, s)).astype(np.int32),
+            "labels": rng.integers(0, run.model.vocab_size, (b, s)).astype(np.int32)}
+
+
+def _trained_state(run, steps_n=3, seed=0):
+    """A few real optimizer steps so the factors are genuinely trained
+    (init factors are exact SVDs — truncation parity would be vacuous)."""
+    mesh = make_host_mesh(1, 1)
+    params, _ = steps.init_params(run, jax.random.PRNGKey(seed))
+    state, parked = steps.make_sharded_train_state(run, params, 0, mesh)
+    fn = jax.jit(functools.partial(steps.build_train_step(run, mesh), phase=0))
+    for i in range(steps_n):
+        state, m = fn(state, steps.shard_batch(_batch(run, seed + i), mesh))
+        assert np.isfinite(float(m["loss"]))
+    return mesh, state, parked
+
+
+# --------------------------------------------------------------------------
+# schedule policy units
+# --------------------------------------------------------------------------
+
+def test_rank_schedule_validation_and_config():
+    with pytest.raises(ValueError, match="policy"):
+        RankSchedule(policy="linear")
+    with pytest.raises(ValueError, match="decay"):
+        RankSchedule(policy="decay", decay=1.0)
+    with pytest.raises(ValueError, match="energy_threshold"):
+        RankSchedule(policy="energy", energy_threshold=0.0)
+    with pytest.raises(ValueError, match="min_rank"):
+        RankSchedule(policy="decay", min_rank=0)
+    assert not RankSchedule().active
+    lrd = LRDConfig(enabled=True, rank_schedule="decay", rank_decay=0.5,
+                    rank_min=3, rank_schedule_tile=64, rank_schedule_start=2)
+    s = rank_adapt.schedule_from_config(lrd)
+    assert s.active and s.decay == 0.5 and s.min_rank == 3
+    assert s.tile == 64 and s.start_boundary == 2
+
+
+def _toy_factors(rank=6, seed=0):
+    u = jax.random.normal(jax.random.PRNGKey(seed), (16, rank), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(seed + 1), (rank, 12), jnp.float32)
+    return {"wq": {"u": u, "v": v, "bias": jnp.zeros((12,))},
+            "norm": {"scale": jnp.ones((16,))}}
+
+
+def test_plan_rank_map_gating_and_decay_targets():
+    p = _toy_factors(rank=6)
+    sched = RankSchedule(policy="decay", decay=0.5, min_rank=2)
+    assert rank_adapt.plan_rank_map(p, RankSchedule()) == {}  # inactive
+    assert rank_adapt.plan_rank_map(p, sched, boundary=0) == {}  # gated
+    assert rank_adapt.plan_rank_map(p, sched, boundary=1) == {"wq": 3}
+    assert rank_adapt.plan_rank_map(p, sched) == {"wq": 3}  # no boundary
+    # min_rank clamps; a group already at the floor plans nothing
+    p3 = _toy_factors(rank=3)
+    assert rank_adapt.plan_rank_map(p3, sched, boundary=1) == {"wq": 2}
+    p2 = _toy_factors(rank=2)
+    assert rank_adapt.plan_rank_map(p2, sched, boundary=1) == {}
+
+
+def test_energy_policy_reads_trained_spectrum():
+    # spectrum [10, 10, 1e-3, ...]: 99.99..% of squared mass in two modes
+    diag = jnp.full((12,), 1e-3).at[:2].set(10.0)
+    w = jnp.zeros((16, 12)).at[:12, :12].set(jnp.diag(diag))
+    u, v = svd.svd_decompose(w, 8)
+    p = {"wq": {"u": u, "v": v}}
+    sched = RankSchedule(policy="energy", energy_threshold=0.9, min_rank=2)
+    assert rank_adapt.plan_rank_map(p, sched, boundary=1) == {"wq": 2}
+    # threshold ~1.0 must keep (almost) everything, not collapse to rank 1
+    # when cumsum roundoff never quite reaches the threshold
+    flat = RankSchedule(policy="energy", energy_threshold=1.0, min_rank=2)
+    uf, vf = svd.svd_decompose(jnp.eye(16, 12) * 3.0, 8)
+    plan = rank_adapt.plan_rank_map({"wq": {"u": uf, "v": vf}}, flat,
+                                    boundary=1)
+    assert plan.get("wq", 8) >= 7  # at most one fp-roundoff mode dropped
+    # stacked groups take the max over the stack (one shared rank)
+    us, vs = jnp.stack([u, uf]), jnp.stack([v, vf])
+    got = rank_adapt.plan_rank_map(
+        {"wq": {"u": us, "v": vs}},
+        RankSchedule(policy="energy", energy_threshold=0.9, min_rank=2),
+        boundary=1)
+    assert got.get("wq", 8) > 2  # the flat layer holds the rank up
+
+
+def test_truncate_params_and_slice_shapes():
+    p = {"layer": _toy_factors(rank=6), "emb": jnp.ones((32, 16))}
+    rank_map = {"layer/wq": 3}
+    t = rank_adapt.truncate_params(p, rank_map)
+    assert t["layer"]["wq"]["u"].shape == (16, 3)
+    assert t["layer"]["wq"]["v"].shape == (3, 12)
+    assert t["layer"]["wq"]["bias"].shape == (12,)  # untouched
+    assert t["emb"] is p["emb"]
+    # moment-shaped trees slice the same way, None holes and numpy pass
+    mu = {"layer": {"wq": {"u": np.ones((16, 6)), "v": None,
+                           "bias": np.ones((12,))},
+                    "norm": {"scale": np.ones((16,))}},
+          "emb": np.ones((32, 16))}
+    s = rank_adapt.slice_tree(mu, rank_map)
+    assert s["layer"]["wq"]["u"].shape == (16, 3)
+    assert isinstance(s["layer"]["wq"]["u"], np.ndarray)
+    assert s["layer"]["wq"]["v"] is None
+    assert s["layer"]["wq"]["bias"].shape == (12,)
+    mu2, nu2 = rank_adapt.slice_moments((mu, ()), rank_map)
+    assert nu2 == () and mu2["layer"]["wq"]["u"].shape == (16, 3)
+    # stacked factors: u cuts the LAST axis, v the second-to-last
+    st = {"blk": {"u": np.ones((2, 16, 6)), "v": np.ones((2, 6, 12))}}
+    s2 = rank_adapt.slice_tree(st, {"blk": 4})
+    assert s2["blk"]["u"].shape == (2, 16, 4)
+    assert s2["blk"]["v"].shape == (2, 4, 12)
+
+
+def test_shape_rewrite_and_decay_trajectory():
+    sds = lambda shp: jax.ShapeDtypeStruct(shp, jnp.float32)
+    shapes = {"a": {"u": sds((2, 64, 16)), "v": sds((2, 16, 64))},
+              "b": {"u": sds((64, 10)), "v": sds((10, 32))}}
+    out = rank_adapt.apply_rank_map_to_shapes(shapes, {"a": 8, "b": 12})
+    assert out["a"]["u"].shape == (2, 64, 8)
+    assert out["a"]["v"].shape == (2, 8, 64)
+    assert out["b"]["u"].shape == (64, 10)  # 12 >= 10: no-op
+    assert rank_adapt.apply_rank_map_to_shapes(shapes, {}) is shapes
+    assert rank_adapt.live_rank_map(shapes) == {"a": 16, "b": 10}
+    sched = RankSchedule(policy="decay", decay=0.5, min_rank=2,
+                         start_boundary=2)
+    maps = rank_adapt.decay_rank_maps(shapes, sched, 4)
+    assert maps[0] == {"a": 16, "b": 10}  # boundary 1 gated by start=2
+    assert maps[1] == {"a": 8, "b": 5}
+    assert maps[2] == {"a": 4, "b": 2}
+    assert maps[3] == {"a": 2, "b": 2}  # floor holds
+
+
+# --------------------------------------------------------------------------
+# parity + optimality (satellite 1)
+# --------------------------------------------------------------------------
+
+def test_truncate_factors_eckart_young_property():
+    """On random factor pairs the QR-reduced truncation matches the optimal
+    SVD-of-the-product error, beats naive column dropping, and its error is
+    monotone non-increasing in rank."""
+    for seed in (0, 1, 2):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        u = jax.random.normal(k1, (40, 10), jnp.float32)
+        v = jax.random.normal(k2, (10, 24), jnp.float32)
+        w = u @ v
+        errs = []
+        for r in (2, 5, 8):
+            u2, v2 = svd.truncate_factors(u, v, r)
+            e = float(svd.reconstruction_error(w, u2, v2))
+            ur, vr = svd.svd_decompose(w, r)
+            e_opt = float(svd.reconstruction_error(w, ur, vr))
+            assert e <= e_opt * (1 + 1e-3) + 1e-6, (seed, r)
+            # naive truncation (drop trailing columns) is strictly worse on
+            # a trained/random pair whose columns are not spectrum-ordered
+            e_naive = float(svd.reconstruction_error(w, u[:, :r], v[:r, :]))
+            assert e <= e_naive + 1e-6, (seed, r)
+            errs.append(e)
+        assert errs == sorted(errs, reverse=True)  # monotone in rank
+
+
+def test_midtrain_truncation_matches_fresh_decompose():
+    """Parity contract: truncating a TRAINED group to rank r in flight is
+    the same operation as merging W = U V and decomposing fresh at rank r —
+    per-group products within 1e-4 and end-to-end loss within 1e-4."""
+    run = _train_run()
+    mesh, state, _ = _trained_state(run, steps_n=3)
+    params = jax.tree_util.tree_map(np.asarray, state.params)
+    sched = RankSchedule(policy="decay", decay=0.5, min_rank=2)
+    rank_map = rank_adapt.plan_rank_map(params, sched, boundary=1)
+    assert rank_map  # every group shrinks at decay 0.5
+
+    truncated = rank_adapt.truncate_params(params, rank_map)
+
+    def fresh_group(path, group):
+        r = rank_map.get(path)
+        if r is None:
+            return group
+        w = jnp.matmul(group["u"].astype(jnp.float32),
+                       group["v"].astype(jnp.float32))
+        u2, v2 = svd.svd_decompose(w, r)
+        out = dict(group)
+        out["u"], out["v"] = (u2.astype(group["u"].dtype),
+                              v2.astype(group["v"].dtype))
+        return out
+
+    fresh = map_factor_groups(params, fresh_group)
+
+    groups_f = dict(iter_factor_groups(fresh))
+    for path, g in iter_factor_groups(truncated):
+        gf = groups_f[path]
+        assert g["u"].shape == gf["u"].shape
+        wt = np.asarray(jnp.matmul(g["u"], g["v"]), np.float32)
+        wf = np.asarray(jnp.matmul(gf["u"], gf["v"]), np.float32)
+        np.testing.assert_allclose(wt, wf, atol=1e-4, rtol=1e-4,
+                                   err_msg=path)
+
+    batch = steps.shard_batch(_batch(run, seed=99), mesh)
+    loss = lambda p: float(steps._loss_fn(
+        p, freezing.partition(p, -1)[1], batch, run, -1))
+    assert abs(loss(truncated) - loss(fresh)) <= 1e-4
+
+
+# --------------------------------------------------------------------------
+# repartition invariants (satellite 2, 1-device)
+# --------------------------------------------------------------------------
+
+def _leaf_shapes(tree):
+    return {tuple(l.shape) for l in jax.tree_util.tree_leaves(tree)}
+
+
+def _eqn_shapes(jaxpr, out=None):
+    """Every aval shape produced anywhere in a jaxpr (incl. scan bodies —
+    the microbatch grad accumulators are scan carries)."""
+    if out is None:
+        out = set()
+    for eqn in jaxpr.eqns:
+        for var in list(eqn.invars) + list(eqn.outvars):
+            if hasattr(var, "aval") and hasattr(var.aval, "shape"):
+                out.add(tuple(var.aval.shape))
+        for val in eqn.params.values():
+            if hasattr(val, "jaxpr"):
+                _eqn_shapes(val.jaxpr, out)
+            elif hasattr(val, "eqns"):
+                _eqn_shapes(val, out)
+    return out
+
+
+def test_repartition_truncates_every_downstream_structure():
+    run = _train_run(microbatches=2, rank_schedule="decay", decay=0.75)
+    schedule = rank_adapt.schedule_from_config(run.lrd)
+    mesh, state, parked = _trained_state(run, steps_n=2)
+    ranks0 = rank_adapt.live_rank_map(state.params)
+    old_factor_shapes = {
+        tuple(l.shape)
+        for _, g in iter_factor_groups(state.params)
+        for l in (g["u"], g["v"])}
+
+    state, parked = steps.repartition_state(
+        run.optim, state, parked, 1, mesh=mesh, run=run,
+        schedule=schedule, boundary=1)
+    ranks1 = rank_adapt.live_rank_map(state.params)
+    assert all(ranks1[p] < ranks0[p] for p in ranks0), (ranks0, ranks1)
+
+    # optimizer moments mirror the truncated trainable partition exactly
+    tr_shapes = jax.tree_util.tree_map(lambda x: x.shape, state.trainable)
+    for mom in (state.opt.mu, state.opt.nu):
+        assert jax.tree_util.tree_map(lambda x: x.shape, mom) == tr_shapes
+    # parked slices mirror the truncated frozen partition, on host
+    fr_shapes = jax.tree_util.tree_map(lambda x: x.shape, state.frozen)
+    for t in parked:
+        assert jax.tree_util.tree_map(lambda x: x.shape, t) == fr_shapes
+        for leaf in jax.tree_util.tree_leaves(t):
+            assert isinstance(leaf, np.ndarray)
+            assert not isinstance(leaf, jax.Array)
+
+    # the traced step (microbatches=2: grads ride a scan carry) must carry
+    # the new rank shapes ONLY — no stale-shape accumulator anywhere
+    train = steps.build_train_step(run, mesh)
+    batch = steps.shard_batch(_batch(run), mesh)
+    jaxpr = jax.make_jaxpr(functools.partial(train, phase=1))(state, batch)
+    produced = _eqn_shapes(jaxpr.jaxpr)
+    live = (_leaf_shapes(state.params) | _leaf_shapes(batch)
+            | _leaf_shapes(state.opt.mu))
+    stale = {s for s in old_factor_shapes if s not in live}
+    assert stale, "decay truncated nothing - invariant check is vacuous"
+    leaked = produced & stale
+    assert not leaked, f"stale pre-truncation shapes in the step: {leaked}"
+
+    # and the step RUNS, shrinking again at the next boundary: the
+    # trainable partition decreases monotonically across swaps
+    nbytes = lambda t: sum(l.size * l.dtype.itemsize
+                           for l in jax.tree_util.tree_leaves(t))
+    b1 = nbytes(state.trainable) + nbytes(state.opt.mu) + nbytes(state.opt.nu)
+    state, m = jax.jit(functools.partial(train, phase=1))(state, batch)
+    assert np.isfinite(float(m["loss"]))
+    state, parked = steps.repartition_state(
+        run.optim, state, parked, 0, mesh=mesh, run=run,
+        schedule=schedule, boundary=2)
+    ranks2 = rank_adapt.live_rank_map(state.params)
+    assert all(ranks2[p] < ranks1[p] for p in ranks1)
+    b2 = nbytes(state.trainable) + nbytes(state.opt.mu) + nbytes(state.opt.nu)
+    assert b2 < b1, (b1, b2)
+    state, m = jax.jit(functools.partial(train, phase=0))(state, batch)
+    assert np.isfinite(float(m["loss"]))
+
+
+# --------------------------------------------------------------------------
+# checkpoint rank-map round-trip + restore guard (satellite 3, in-process)
+# --------------------------------------------------------------------------
+
+def test_checkpoint_rank_map_roundtrip_and_guard(tmp_path):
+    from repro.checkpoint import (live_rank_map, load_checkpoint,
+                                  pack_phased_state, save_checkpoint,
+                                  unpack_phased_state)
+    from repro.checkpoint.store import latest_checkpoint
+    from repro.optim.optimizers import OptState
+
+    run = _train_run(rank_schedule="decay", decay=0.5)
+    schedule = rank_adapt.schedule_from_config(run.lrd)
+    mesh, state, parked = _trained_state(run, steps_n=1)
+    state, parked = steps.repartition_state(
+        run.optim, state, parked, 1, mesh=mesh, run=run,
+        schedule=schedule, boundary=1)
+    rank_map = rank_adapt.live_rank_map(state.params)
+
+    save_checkpoint(tmp_path, 5, pack_phased_state(state, parked),
+                    extra={"phase": 1, "rank_map": rank_map})
+    saved, step_n, extra = load_checkpoint(latest_checkpoint(tmp_path))
+    assert step_n == 5
+    assert {p: int(r) for p, r in extra["rank_map"].items()} == rank_map
+    assert live_rank_map(saved) == rank_map
+
+    (tr, fr, opt), _ = unpack_phased_state(saved, 1, expect_rank_map=rank_map)
+    got = rank_adapt.live_rank_map(steps.TrainState(tr, fr,
+                                                    OptState(*opt)).params)
+    assert got == rank_map
+    wrong = dict(rank_map)
+    wrong[next(iter(wrong))] += 1
+    with pytest.raises(ValueError, match="rank"):
+        unpack_phased_state(saved, 1, expect_rank_map=wrong)

@@ -20,7 +20,11 @@ process — 1 CPU device — cannot host them):
   factor's backward kernel AND its psum;
 * elastic resume: a checkpoint written on a 1-device mesh restores onto
   the (4,2) 8-device mesh and the next step's loss matches the 1-device
-  continuation to <= 1e-5.
+  continuation to <= 1e-5;
+* in-training rank adaptation (DESIGN.md §10): under a decaying rank
+  schedule the per-step gradient-sync collective bytes strictly decrease
+  at every freezing-phase boundary on the pure-DP mesh — each scheduled
+  truncation removes its slice of wire traffic.
 
 The in-process tests cover the cheap satellites: ``make_host_mesh``
 validation, the one-time ``shard()`` no-context warning, and
@@ -341,6 +345,46 @@ _, mB = fn8(state8, batch)           # 8-device continuation of the SAME state
 loss_b = float(mB["loss"])
 assert abs(loss_a - loss_b) <= 1e-5, (loss_a, loss_b)
 print("ELASTIC_OK", loss_a, loss_b)
+
+# ---- in-training rank adaptation: sync bytes shrink every boundary --------
+# (DESIGN.md §10) on the pure-DP mesh the gradient all-reduce covers exactly
+# the trainable partition, so each scheduled truncation must remove its
+# slice of wire traffic: per-step collective bytes STRICTLY decrease across
+# the four segments (phase 0 full -> p1@0.75 -> p0@0.56 -> p1@0.42)
+from repro.core import rank_adapt
+
+run_ra = dataclasses.replace(run, lrd=dataclasses.replace(
+    run.lrd, rank_schedule="decay", rank_decay=0.75, rank_min=2))
+sched_ra = rank_adapt.schedule_from_config(run_ra.lrd)
+train_ra = steps.build_train_step(run_ra, mesh_dp)
+st_ra, parked_ra = steps.make_sharded_train_state(run_ra, params_h, 0,
+                                                  mesh_dp)
+seg_sync, seg_rank = [], []
+for epoch in range(4):
+    phase = epoch % 2
+    if epoch > 0:
+        st_ra, parked_ra = steps.repartition_state(
+            run_ra.optim, st_ra, parked_ra, phase, mesh=mesh_dp, run=run_ra,
+            schedule=sched_ra, boundary=epoch)
+    shs_ra = steps.state_shardings(run_ra, mesh_dp, st_ra)
+    fn_ra = jax.jit(functools.partial(train_ra, phase=phase),
+                    in_shardings=(shs_ra,
+                                  steps.batch_shardings(batch_dp, mesh_dp)),
+                    out_shardings=(shs_ra, None))
+    cb = analyze_hlo(fn_ra.lower(st_ra, batch_dp).compile().as_text()
+                     ).collective_bytes
+    seg_sync.append(sum(v for k, v in cb.items()
+                        if k in ("all-reduce", "all-gather",
+                                 "reduce-scatter", "all-to-all")))
+    seg_rank.append(sum(rank_adapt.live_rank_map(st_ra.params).values()))
+    st_ra, m_ra = fn_ra(st_ra, batch_dp)
+    assert np.isfinite(float(m_ra["loss"]))
+    steps.check_state_placement(run_ra, mesh_dp, st_ra)
+assert all(a > b for a, b in zip(seg_rank, seg_rank[1:])), seg_rank
+assert all(a > b for a, b in zip(seg_sync, seg_sync[1:])), \
+    f"sync bytes must strictly decrease across rank-adapted phases: " \
+    f"{{seg_sync}} (ranks {{seg_rank}})"
+print("RANK_SYNC_OK", seg_sync)
 '''
 
 
@@ -350,5 +394,5 @@ def test_sharded_train_8dev():
                          text=True, timeout=1200)
     report = (out.stdout[-3000:] + "\n--- stderr ---\n" + out.stderr[-3000:])
     for marker in ("PLACEMENT_OK", "FROZEN_COLLECTIVE_OK", "INT8_PSUM_OK",
-                   "KERNEL_SHMAP_OK", "ELASTIC_OK"):
+                   "KERNEL_SHMAP_OK", "ELASTIC_OK", "RANK_SYNC_OK"):
         assert marker in out.stdout, f"missing {marker}\n{report}"
