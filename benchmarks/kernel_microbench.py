@@ -1,13 +1,24 @@
-"""Fused low-rank matmul kernel: correctness-at-scale sweep + analytic
-HBM-traffic saving + CPU wall-clock of the fused-jnp vs two-dot paths,
-for the forward AND the backward per sequential-freezing phase.
+"""Fused low-rank matmul kernel: measured fused-vs-unfused wall clock,
+correctness sweep, analytic HBM-traffic saving — for the forward AND the
+backward per sequential-freezing phase.
 
 On TPU the fused Pallas kernels remove the rank-r intermediates' HBM
 round-trips (t = x@U in the forward; t and dt = dy@Vᵀ in the backward —
-DESIGN.md §3); here we report the analytic saving per shape (the dry-run is
-the perf artifact), validate numerics in interpret mode, and count the
-backward kernels actually emitted per freeze phase (the frozen factor's
-kernel must be absent from the jaxpr, not DCE'd)."""
+DESIGN.md §3).  Here every row carries BOTH:
+
+* ``measured_*_us`` — real wall clock through the shared benchmark timer
+  (warm-up + median-of-k, ``benchmarks.common.time_fn``): *fused* is one
+  compiled program that keeps the intermediate out of the timed memory
+  hierarchy; *unfused* is two separately compiled programs with the
+  intermediate materialized (blocked) between them — the same fusion the
+  Pallas kernels buy on TPU, measured on whatever backend runs the bench;
+* ``analytic_*_us`` — the v5e roofline model's prediction for the same
+  shapes, clearly namespaced so nobody mistakes a model for a measurement.
+
+Rows also record the block config the autotuner would launch with
+(``tuned_*``, when a TuningTable is active) and the ``fallback_reason``
+the dispatcher reported, so a row whose timing came from the jnp fallback
+can never masquerade as a kernel measurement."""
 
 from __future__ import annotations
 
@@ -18,35 +29,115 @@ import numpy as np
 from benchmarks.common import time_fn
 from repro.core import freezing
 from repro.core.rank_opt import TPU_V5E, analytic_layer_time
-from repro.kernels import ops, ref
+from repro.kernels import autotune, ops, ref
 
 SHAPES = [
-    # (m, c, r, s) — last one is memory-bound (decode-like small m): the
-    # fused kernel's HBM saving shows up directly in the time column there.
-    (4096, 4096, 512, 4096),
-    (8192, 8192, 1024, 8192),
-    (4096, 8192, 768, 2048),
-    (256, 8192, 1024, 8192),
+    # (m, c, r, s) — a decode-leaning ladder: fused-vs-unfused is decided
+    # by the intermediate's round-trip, which dominates as m shrinks.
+    (1024, 4096, 512, 4096),
+    (256, 4096, 512, 4096),
+    (64, 2048, 256, 2048),
+    (16, 1024, 128, 1024),
 ]
 
 
+def _fwd_paths():
+    """(fused, unfused) forward callables.  Fused: one compiled program —
+    the dispatcher's own path (Pallas kernel on TPU, single fused XLA
+    computation elsewhere).  Unfused: two separately compiled programs with
+    the (m, r) intermediate blocked to the host between them."""
+
+    @jax.jit
+    def fused(x, u, v):
+        with ops.capture_fallbacks():  # trace-time; no-op on re-use
+            return ops.lowrank_apply(x, u, v)
+
+    first = jax.jit(lambda x, u: jnp.dot(x, u, preferred_element_type=jnp.float32).astype(x.dtype))
+    second = jax.jit(lambda t, v: jnp.dot(t, v, preferred_element_type=jnp.float32).astype(t.dtype))
+
+    def unfused(x, u, v):
+        t = first(x, u)
+        jax.block_until_ready(t)  # force the HBM round-trip the kernel removes
+        return second(t, v)
+
+    return fused, unfused
+
+
+def _bwd_paths(dy):
+    """(fused, unfused) backward callables (dx, du, dv).  Fused: one
+    compiled grad program.  Unfused: per-stage VJPs with t and dt
+    materialized between the four separately dispatched programs."""
+
+    def loss(x, u, v):
+        return jnp.vdot(ops.lowrank_apply(x, u, v), dy)
+
+    fused = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
+
+    first = jax.jit(lambda x, u: jnp.dot(x, u, preferred_element_type=jnp.float32).astype(x.dtype))
+    second = jax.jit(lambda t, v: jnp.dot(t, v, preferred_element_type=jnp.float32).astype(t.dtype))
+
+    def unfused(x, u, v):
+        t, vjp1 = jax.vjp(first, x, u)
+        jax.block_until_ready(t)
+        _, vjp2 = jax.vjp(second, t, v)
+        dt, dv = vjp2(dy)
+        jax.block_until_ready(dt)
+        dx, du = vjp1(dt)
+        return dx, du, dv
+
+    return fused, unfused
+
+
 def run(iters=3):
+    table = autotune.get_table()
     rows = []
     for m, c, r, s in SHAPES:
         t_unfused = analytic_layer_time(m, c, s, r, kernel_fused=False)
         t_fused = analytic_layer_time(m, c, s, r, kernel_fused=True)
         saved = (m * r * 2) * 2  # intermediate write + read, bf16
+
+        k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(m), 4)
+        x = jax.random.normal(k1, (m, c), jnp.float32)
+        u = jax.random.normal(k2, (c, r), jnp.float32) * 0.05
+        v = jax.random.normal(k3, (r, s), jnp.float32) * 0.1
+        dy = jax.random.normal(k4, (m, s), jnp.float32)
+
+        # capture the dispatcher's verdict once, at trace time
+        with ops.capture_fallbacks() as fbs:
+            jax.block_until_ready(ops.lowrank_apply(x, u, v))
+        fallback_reason = fbs[0].reason if fbs else ""
+
+        fwd_fused, fwd_unfused = _fwd_paths()
+        meas_fused = time_fn(fwd_fused, x, u, v, iters=iters) * 1e6
+        meas_unfused = time_fn(fwd_unfused, x, u, v, iters=iters) * 1e6
+
+        bwd_fused, bwd_unfused = _bwd_paths(dy)
+        meas_bwd_fused = time_fn(bwd_fused, x, u, v, iters=iters) * 1e6
+        meas_bwd_unfused = time_fn(bwd_unfused, x, u, v, iters=iters) * 1e6
+
+        entry = table.lookup("lowrank_fwd", m, c, r, s, jnp.float32) if table else None
         # interpret-mode correctness on a scaled-down version
         sm, sc, sr, ss = 256, 512, 128, 256
-        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(m), 3)
-        x = jax.random.normal(k1, (sm, sc), jnp.float32)
-        u = jax.random.normal(k2, (sc, sr), jnp.float32) * 0.05
-        v = jax.random.normal(k3, (sr, ss), jnp.float32) * 0.1
-        got = ops.lowrank_apply(x, u, v, use_kernel=True, interpret=True)
-        want = ref.lowrank_matmul_ref(x, u, v)
+        sk1, sk2, sk3 = jax.random.split(jax.random.PRNGKey(m + 1), 3)
+        sx = jax.random.normal(sk1, (sm, sc), jnp.float32)
+        su = jax.random.normal(sk2, (sc, sr), jnp.float32) * 0.05
+        sv = jax.random.normal(sk3, (sr, ss), jnp.float32) * 0.1
+        got = ops.lowrank_apply(sx, su, sv, use_kernel=True, interpret=True,
+                                block_m=128, block_k=256, block_n=128)
+        want = ref.lowrank_matmul_ref(sx, su, sv)
         err = float(jnp.max(jnp.abs(got - want)))
         rows.append({
             "shape": f"{m}x{c}x{r}x{s}",
+            "measured_fused_us": meas_fused,
+            "measured_unfused_us": meas_unfused,
+            "measured_fwd_speedup": meas_unfused / max(meas_fused, 1e-9),
+            "measured_bwd_fused_us": meas_bwd_fused,
+            "measured_bwd_unfused_us": meas_bwd_unfused,
+            "measured_bwd_speedup": meas_bwd_unfused / max(meas_bwd_fused, 1e-9),
+            "fallback_reason": fallback_reason,
+            "tuned_blocks": ([entry.block_m, entry.block_k, entry.block_n]
+                             if entry else None),
+            "tuned_source": entry.source if entry else "",
             "analytic_unfused_us": t_unfused * 1e6,
             "analytic_fused_us": t_fused * 1e6,
             "hbm_saved_mb": saved / 1e6,
@@ -161,12 +252,19 @@ def run_flash(iters=2):
 
 def main(**kw):
     rows = run(**kw)
-    print("# kernel microbench fwd: shape, unfused_us(TPU-analytic), fused_us, "
-          "HBM_saved_MB, interpret_err")
+    print("# kernel microbench fwd: shape, measured fused/unfused us (x), "
+          "measured bwd fused/unfused us (x), fallback, analytic fused/unfused "
+          "us, HBM_saved_MB, interpret_err")
     for r in rows:
-        print(f"{r['shape']},{r['analytic_unfused_us']:.1f},"
-              f"{r['analytic_fused_us']:.1f},{r['hbm_saved_mb']:.1f},"
-              f"{r['interpret_max_err']:.2e}")
+        print(f"{r['shape']},{r['measured_fused_us']:.0f}/"
+              f"{r['measured_unfused_us']:.0f} ({r['measured_fwd_speedup']:.2f}x),"
+              f"{r['measured_bwd_fused_us']:.0f}/"
+              f"{r['measured_bwd_unfused_us']:.0f} ({r['measured_bwd_speedup']:.2f}x),"
+              f"{r['fallback_reason'] or 'kernel'},"
+              f"{r['analytic_fused_us']:.1f}/{r['analytic_unfused_us']:.1f},"
+              f"{r['hbm_saved_mb']:.1f},{r['interpret_max_err']:.2e}")
+    wins = sum(1 for r in rows if r["measured_fused_us"] < r["measured_unfused_us"])
+    print(f"fused wins measured fwd wall-clock on {wins}/{len(rows)} shapes")
     bwd_rows, bwd_measured = run_bwd(**kw)
     print("# kernel microbench bwd (analytic): shape, phase, kernels_emitted, "
           "HBM_saved_MB, recompute")

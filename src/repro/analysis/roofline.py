@@ -13,7 +13,7 @@ masked-attention / capacity-padding waste.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.analysis.hlo import HloCost
 
@@ -25,9 +25,132 @@ class ChipSpecs:
     hbm_bw: float = 819e9  # B/s
     ici_bw: float = 50e9  # B/s per link (conservative single-link)
     hbm_bytes: float = 16 * 2 ** 30
+    vmem_bytes: float = 16 * 2 ** 20  # per-core VMEM budget
+    int8_flops: float = 394e12  # int8 MXU peak (2x bf16 on v5e)
 
 
 TPU_V5E_SPECS = ChipSpecs()
+
+
+def dtype_bytes(dtype) -> int:
+    """Operand bytes per element — int8 kernels move half of bf16's traffic
+    (the earlier model hard-coded 2 bytes and over-charged every int8
+    candidate's HBM term)."""
+    name = getattr(dtype, "name", None) or str(dtype)
+    if "int8" in name or "uint8" in name or "fp8" in name:
+        return 1
+    if "bfloat16" in name or "float16" in name:
+        return 2
+    if "64" in name:
+        return 8
+    return 4
+
+
+# --------------------------------------------------------------------------
+# Fused-kernel candidate model (kernels/autotune.py feeds on this)
+# --------------------------------------------------------------------------
+#
+# The autotuner enumerates (block_m, block_k, block_n) launch configs for
+# the fused low-rank kernels and needs two analytic answers per candidate:
+#
+#  * does the working set FIT in VMEM?  The kernels' BlockSpec grid
+#    pipeline (and the manual make_async_copy path) double-buffers every
+#    streamed block — each input/output block exists in two VMEM slots at
+#    steady state, while the fp32 scratch accumulators are single-buffered.
+#    The previous single-buffer bf16 model under-counted the footprint of
+#    pipelined blocks AND over-counted int8 operands, over-rejecting
+#    exactly the large-block candidates that win on HBM re-reads.
+#
+#  * a predicted wall-clock to RANK the survivors: max(compute, memory)
+#    with grid-aware HBM traffic (a block re-reads x once per output
+#    column tile, U once per row tile, ...), per-dtype operand bytes.
+
+
+def kernel_vmem_bytes(op: str, block_m: int, block_k: int, block_n: int,
+                      r: int, dtype, *, double_buffered: bool = True) -> int:
+    """Steady-state VMEM footprint of one fused-kernel launch config.
+
+    ``op``: "lowrank_fwd" | "lowrank_dx" | "lowrank_du" | "lowrank_dv" |
+    "lowrank_ffn" | "flash" (block_k doubles as block_kv, r as head_dim).
+    """
+    eb = dtype_bytes(dtype)
+    mult = 2 if double_buffered else 1
+    f32 = 4
+    if op == "lowrank_fwd":
+        stream = (block_m * block_k + block_k * r + r * block_n
+                  + block_m * block_n) * eb
+        scratch = block_m * r * f32
+    elif op == "lowrank_dx":
+        stream = (block_m * block_n + block_k * r + r * block_n
+                  + block_m * block_k) * eb
+        scratch = block_m * r * f32
+    elif op == "lowrank_du":
+        stream = (block_m * block_k + block_m * block_n + r * block_n
+                  + block_k * r) * eb
+        scratch = (block_m * r + block_k * r) * f32
+    elif op == "lowrank_dv":
+        stream = (block_m * block_k + block_k * r + block_m * block_n
+                  + r * block_n) * eb
+        scratch = (block_m * r + r * block_n) * f32
+    elif op == "lowrank_ffn":
+        stream = (block_m * block_k + 2 * (block_k * r + r * block_n)
+                  + block_m * block_n) * eb
+        scratch = 2 * block_m * r * f32
+    elif op == "flash":
+        stream = (block_m * r + 2 * block_k * r + block_m * r) * eb
+        scratch = (2 * block_m + block_m * r) * f32
+    else:
+        raise ValueError(f"unknown op {op!r}")
+    return stream * mult + scratch
+
+
+def kernel_candidate_time(op: str, m: int, c: int, r: int, s: int,
+                          block_m: int, block_k: int, block_n: int,
+                          dtype, *, specs: ChipSpecs = TPU_V5E_SPECS) -> float:
+    """Predicted seconds for one launch config: max(compute, memory) with
+    grid-aware HBM traffic.  Smaller grids re-read the streamed operands
+    fewer times, which is the whole reason block size is worth tuning."""
+    eb = dtype_bytes(dtype)
+    peak = specs.int8_flops if eb == 1 else specs.peak_flops
+    gm, gk, gn = -(-m // block_m), -(-c // block_k), -(-s // block_n)
+    if op in ("lowrank_fwd", "lowrank_ffn"):
+        branches = 2 if op == "lowrank_ffn" else 1
+        flops = 2.0 * m * c * r * branches + 2.0 * m * r * s * branches
+        #   x read once per output-column tile; U once per row tile (per
+        #   branch); V once per (row, k=last) visit — i.e. per row tile.
+        mem = (m * c * gn + branches * (c * r * gm + r * s * gm) + m * s) * eb
+    elif op == "lowrank_dx":
+        flops = 2.0 * m * s * r + 2.0 * m * r * c
+        mem = (m * s * gk + r * s * gm + c * r * gm + m * c) * eb
+    elif op == "lowrank_du":
+        flops = 2.0 * m * s * r * gk + 2.0 * m * c * r
+        mem = (m * s * gk + r * s * gk + m * c * 1 + c * r) * eb
+    elif op == "lowrank_dv":
+        flops = 2.0 * m * c * r * gn + 2.0 * m * r * s
+        mem = (m * c * gn + c * r * gn + m * s * 1 + r * s) * eb
+    elif op == "flash":
+        flops = 4.0 * m * s * r
+        mem = (m * r * 1 + 2 * s * r * gm + m * r) * eb
+    else:
+        raise ValueError(f"unknown op {op!r}")
+    return max(flops / peak, mem / specs.hbm_bw)
+
+
+def prune_candidates(op: str, m: int, c: int, r: int, s: int, dtype,
+                     candidates: List[Tuple[int, int, int]],
+                     *, specs: ChipSpecs = TPU_V5E_SPECS,
+                     double_buffered: bool = True,
+                     ) -> List[Tuple[int, int, int]]:
+    """VMEM-fit + arithmetic-intensity pruning, survivors ordered by
+    predicted time (best first).  Candidates whose double-buffered working
+    set exceeds the VMEM budget are dropped; the rest are ranked so a
+    measurement budget of k means 'time the k analytically-best configs'."""
+    fit = [cand for cand in candidates
+           if kernel_vmem_bytes(op, *cand, r=r, dtype=dtype,
+                                double_buffered=double_buffered)
+           <= specs.vmem_bytes]
+    return sorted(fit, key=lambda cand: kernel_candidate_time(
+        op, m, c, r, s, *cand, dtype, specs=specs))
 
 
 @dataclasses.dataclass

@@ -205,6 +205,11 @@ class LRDConfig:
     pallas_block_k: int = 512
     pallas_block_n: int = 256
     pallas_interpret: bool = False
+    # Kernel autotuning + quantized decode (DESIGN.md §11):
+    pallas_autotune: bool = False  # consult the active TuningTable per shape
+    pallas_autotune_table: str = ""  # table JSON loaded at policy build time
+    pallas_double_buffer: bool = False  # explicit 2-slot DMA pipeline (fwd/dx)
+    int8_decode: str = "native"  # int8 export/KV consumption: native | bf16
     # --- in-training rank adaptation (core/rank_adapt.py, DESIGN.md §10) --
     # Fires at sequential-freezing phase boundaries only; "none" keeps the
     # decomposition ranks fixed for the whole run (the default paper flow).

@@ -76,8 +76,42 @@ def _dx_kernel(dy_ref, u_ref, v_ref, o_ref, dt_ref, *, out_dtype):
         o_ref[...] = _dot_t2(dt, u_ref[...]).astype(out_dtype)
 
 
+def _dx_kernel_db(dy_ref, u_ref, v_hbm_ref, o_ref, dt_ref, v_buf, v_sem,
+                  *, out_dtype, block_n):
+    """dx with an explicit two-slot DMA pipeline on the V stream (the
+    k-loop-varying operand here) — mirror of ``lowrank_matmul._kernel_db``:
+    tile k+1's (r, bn) copy is started before tile k's is awaited, so the
+    transfer hides under the dy@Vᵀ MXU step."""
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    def v_copy(slot, kk):
+        return pltpu.make_async_copy(
+            v_hbm_ref.at[:, pl.ds(kk * block_n, block_n)],
+            v_buf.at[slot], v_sem.at[slot])
+
+    @pl.when(k == 0)
+    def _warmup():
+        dt_ref[...] = jnp.zeros_like(dt_ref)
+        v_copy(0, 0).start()
+
+    @pl.when(k + 1 < nk)
+    def _prefetch_next():
+        v_copy((k + 1) % 2, k + 1).start()
+
+    v_copy(k % 2, k).wait()
+    dt_ref[...] += _dot_t2(dy_ref[...], v_buf[k % 2])
+
+    @pl.when(k == nk - 1)
+    def _project():
+        dt = dt_ref[...].astype(dy_ref.dtype)
+        o_ref[...] = _dot_t2(dt, u_ref[...]).astype(out_dtype)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("block_m", "block_k", "block_n", "interpret")
+    jax.jit,
+    static_argnames=("block_m", "block_k", "block_n", "interpret",
+                     "double_buffer"),
 )
 def lowrank_matmul_dx(
     dy: jax.Array,
@@ -88,8 +122,12 @@ def lowrank_matmul_dx(
     block_k: int = 512,
     block_n: int = 256,
     interpret: bool = False,
+    double_buffer: bool = False,
 ) -> jax.Array:
-    """dx = (dy @ vᵀ) @ uᵀ.  dy: (M, S); u: (C, R); v: (R, S) -> (M, C)."""
+    """dx = (dy @ vᵀ) @ uᵀ.  dy: (M, S); u: (C, R); v: (R, S) -> (M, C).
+
+    ``double_buffer`` switches the V stream to the explicit two-slot DMA
+    pipeline (same numerics)."""
     m, s = dy.shape
     c, r = u.shape
     assert v.shape == (r, s), (dy.shape, u.shape, v.shape)
@@ -98,6 +136,29 @@ def lowrank_matmul_dx(
         f"({block_m},{block_k},{block_n})")
 
     grid = (m // block_m, c // block_k, s // block_n)
+    if double_buffer:
+        kernel = functools.partial(_dx_kernel_db, out_dtype=dy.dtype,
+                                   block_n=block_n)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, k)),  # dy
+                pl.BlockSpec((block_k, r), lambda i, j, k: (j, 0)),  # u
+                pl.BlockSpec(memory_space=pltpu.ANY),  # v: manual DMA
+            ],
+            out_specs=pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, c), dy.dtype),
+            scratch_shapes=[
+                pltpu.VMEM((block_m, r), jnp.float32),  # dt
+                pltpu.VMEM((2, r, block_n), v.dtype),  # two-slot V buffer
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+            compiler_params=pallas_compiler_params(
+                dimension_semantics=("parallel", "parallel", "arbitrary"),
+            ),
+            interpret=interpret,
+        )(dy, u, v)
     kernel = functools.partial(_dx_kernel, out_dtype=dy.dtype)
     return pl.pallas_call(
         kernel,

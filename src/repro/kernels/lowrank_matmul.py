@@ -55,8 +55,54 @@ def _kernel(x_ref, u_ref, v_ref, o_ref, acc_ref, *, out_dtype):
         ).astype(out_dtype)
 
 
+def _kernel_db(x_ref, u_hbm_ref, v_ref, o_ref, acc_ref, u_buf, u_sem,
+               *, out_dtype, block_k):
+    """Explicit two-slot DMA pipeline for the U stream.
+
+    U stays in ``pltpu.ANY`` (compiler-placed, HBM at these sizes) and is
+    copied tile-by-tile into a double-buffered VMEM scratch: at k-step k the
+    copy for tile k+1 is STARTED before the copy for tile k is awaited, so
+    the (bk, r) U transfer for the next step overlaps the x@U MXU work of
+    the current one.  The BlockSpec grid pipeline does the same for x/V
+    implicitly; this is the explicit variant the autotuner can A/B
+    (``KernelPolicy.double_buffer``) and the template for streams BlockSpec
+    can't express (e.g. decode-time paged pools).
+    """
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    def u_copy(slot, kk):
+        return pltpu.make_async_copy(
+            u_hbm_ref.at[pl.ds(kk * block_k, block_k), :],
+            u_buf.at[slot], u_sem.at[slot])
+
+    @pl.when(k == 0)
+    def _warmup():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        u_copy(0, 0).start()
+
+    @pl.when(k + 1 < nk)
+    def _prefetch_next():
+        # slot (k+1) % 2 was consumed at step k-1 — free to overwrite
+        u_copy((k + 1) % 2, k + 1).start()
+
+    u_copy(k % 2, k).wait()
+    acc_ref[...] += jnp.dot(
+        x_ref[...], u_buf[k % 2], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _project():
+        t = acc_ref[...].astype(x_ref.dtype)
+        o_ref[...] = jnp.dot(
+            t, v_ref[...], preferred_element_type=jnp.float32
+        ).astype(out_dtype)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("block_m", "block_k", "block_n", "interpret")
+    jax.jit,
+    static_argnames=("block_m", "block_k", "block_n", "interpret",
+                     "double_buffer"),
 )
 def lowrank_matmul(
     x: jax.Array,
@@ -67,13 +113,16 @@ def lowrank_matmul(
     block_k: int = 512,
     block_n: int = 256,
     interpret: bool = False,
+    double_buffer: bool = False,
 ) -> jax.Array:
     """Fused ``(x @ u) @ v``.
 
     x: (M, C); u: (C, R); v: (R, S) -> (M, S).  M, C, S must be divisible by
     the respective block sizes (``ops.lowrank_apply`` pads/falls back).  The
     full rank R is kept per-tile (low-rank by construction: R <= 512 after
-    quantization in every config we ship).
+    quantization in every config we ship).  ``double_buffer`` switches the U
+    stream to the explicit two-slot DMA pipeline (same numerics — asserted
+    in tests/test_kernels.py).
     """
     m, c = x.shape
     r = u.shape[1]
@@ -84,6 +133,29 @@ def lowrank_matmul(
     )
 
     grid = (m // block_m, s // block_n, c // block_k)
+    if double_buffer:
+        kernel = functools.partial(_kernel_db, out_dtype=x.dtype,
+                                   block_k=block_k)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),  # x
+                pl.BlockSpec(memory_space=pltpu.ANY),  # u: manual DMA
+                pl.BlockSpec((r, block_n), lambda i, j, k: (0, j)),  # v
+            ],
+            out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, s), x.dtype),
+            scratch_shapes=[
+                pltpu.VMEM((block_m, r), jnp.float32),  # acc
+                pltpu.VMEM((2, block_k, r), u.dtype),  # two-slot U buffer
+                pltpu.SemaphoreType.DMA((2,)),  # one DMA sem per slot
+            ],
+            compiler_params=pallas_compiler_params(
+                dimension_semantics=("parallel", "parallel", "arbitrary"),
+            ),
+            interpret=interpret,
+        )(x, u, v)
     kernel = functools.partial(_kernel, out_dtype=x.dtype)
     return pl.pallas_call(
         kernel,

@@ -25,9 +25,11 @@ so the policy rides that argument and no intermediate signature changes.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
-from typing import Optional, Tuple, Union
+import logging
+from typing import List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +38,8 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 from repro.distributed import sharding as _shmod
 from repro.kernels import ref
+from repro.kernels.int8_matmul import (int8_lowrank_matmul, int8_matmul,
+                                       quantize_rowwise)
 from repro.kernels.lowrank_bwd import (lowrank_matmul_du, lowrank_matmul_dv,
                                        lowrank_matmul_dx)
 from repro.kernels.lowrank_ffn import lowrank_gated_ffn
@@ -45,7 +49,59 @@ __all__ = [
     "KernelPolicy", "as_policy", "kernel_available",
     "lowrank_apply", "lowrank_matmul_vjp",
     "lowrank_ffn_apply", "lowrank_ffn_vjp",
+    "int8_apply", "int8_lowrank_apply",
+    "Fallback", "capture_fallbacks",
 ]
+
+_log = logging.getLogger(__name__)
+
+
+# --------------------------------------------------------------------------
+# Fallback accounting
+# --------------------------------------------------------------------------
+#
+# Every dispatcher below can silently take the jnp reference path (off-TPU,
+# indivisible shapes, shard_map regions with no legal mapping).  That is the
+# right behavior for model code — but a TIMING harness that thinks it
+# measured the kernel while it measured the fallback poisons the autotune
+# table.  ``capture_fallbacks`` records every fallback decision made while
+# the context is open (dispatch runs in Python at trace time, so notes fire
+# exactly when a call traces); kernels/autotune.py refuses to mint a
+# ``source="measured"`` entry whenever the capture is non-empty.
+
+
+@dataclasses.dataclass(frozen=True)
+class Fallback:
+    """One dispatcher decision to run the jnp path instead of the kernel."""
+
+    op: str
+    reason: str  # "platform" | "disabled" | "indivisible" | "mesh-*" | ...
+    shape: Tuple[int, ...] = ()
+
+
+_FALLBACK_SINKS: List[List[Fallback]] = []
+_LOGGED_FALLBACKS: set = set()
+
+
+@contextlib.contextmanager
+def capture_fallbacks():
+    """Collect every dispatcher fallback taken while open (nestable)."""
+    sink: List[Fallback] = []
+    _FALLBACK_SINKS.append(sink)
+    try:
+        yield sink
+    finally:
+        _FALLBACK_SINKS.remove(sink)
+
+
+def _note_fallback(op: str, reason: str, shape: Tuple[int, ...] = ()) -> None:
+    fb = Fallback(op, reason, tuple(int(d) for d in shape))
+    for sink in _FALLBACK_SINKS:
+        sink.append(fb)
+    if (op, reason) not in _LOGGED_FALLBACKS:  # once per (op, reason)
+        _LOGGED_FALLBACKS.add((op, reason))
+        _log.debug("kernel fallback: op=%s reason=%s shape=%s",
+                   op, reason, shape)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +117,17 @@ class KernelPolicy:
     1 = v, per ``core.freezing``); the matching backward kernel is not
     emitted.  ``interpret`` runs the Pallas kernels in interpret mode
     (CPU validation).  The block sizes feed every kernel launch.
+
+    ``autotune`` consults the active :class:`~repro.kernels.autotune.
+    TuningTable` at trace time — a hit overrides the static block sizes
+    for that (op, shape-bucket, dtype, freeze_phase); a miss keeps them.
+    ``double_buffer`` selects the explicit two-slot DMA pipeline variant
+    of the fused fwd/dx kernels (prefetch the next U/V tile while the
+    rank-r intermediate is in the MXU).  ``int8_decode`` picks how the
+    serving engine consumes rank-quantized int8 exports: ``"native"``
+    (int8 x int8 -> int32 kernels / weight-only f32 fallback) or
+    ``"bf16"`` (legacy dequantize-everything round trip, kept as the
+    benchmark baseline).
     """
 
     use_pallas: bool = False
@@ -69,6 +136,9 @@ class KernelPolicy:
     block_m: int = 256
     block_k: int = 512
     block_n: int = 256
+    autotune: bool = False
+    double_buffer: bool = False
+    int8_decode: str = "native"
 
     def __bool__(self) -> bool:  # `if use_pallas:` keeps working
         return self.use_pallas
@@ -85,24 +155,28 @@ def as_policy(use_pallas: Union[bool, KernelPolicy, None]) -> KernelPolicy:
 # lowrank matmul: fused forward + freezing-aware fused backward
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
 def lowrank_matmul_vjp(x, u, v, block_m, block_k, block_n, interpret,
-                       freeze_group):
+                       freeze_group, double_buffer=False):
     return lowrank_matmul(x, u, v, block_m=block_m, block_k=block_k,
-                          block_n=block_n, interpret=interpret)
+                          block_n=block_n, interpret=interpret,
+                          double_buffer=double_buffer)
 
 
-def _lr_fwd(x, u, v, block_m, block_k, block_n, interpret, freeze_group):
+def _lr_fwd(x, u, v, block_m, block_k, block_n, interpret, freeze_group,
+            double_buffer=False):
     y = lowrank_matmul(x, u, v, block_m=block_m, block_k=block_k,
-                       block_n=block_n, interpret=interpret)
+                       block_n=block_n, interpret=interpret,
+                       double_buffer=double_buffer)
     return y, (x, u, v)
 
 
-def _lr_bwd(block_m, block_k, block_n, interpret, freeze_group, res, dy):
+def _lr_bwd(block_m, block_k, block_n, interpret, freeze_group,
+            double_buffer, res, dy):
     x, u, v = res
     kw = dict(block_m=block_m, block_k=block_k, block_n=block_n,
               interpret=interpret)
-    dx = lowrank_matmul_dx(dy, u, v, **kw)
+    dx = lowrank_matmul_dx(dy, u, v, double_buffer=double_buffer, **kw)
     # freeze_group is STATIC: the frozen factor's kernel is absent from the
     # jaxpr, not emitted-then-DCE'd.  The zeros cotangent is dropped by the
     # upstream stop_gradient transpose.
@@ -123,6 +197,28 @@ def kernel_available(platform: str | None = None) -> bool:
 
 def _divisible(m: int, c: int, s: int, bm: int, bk: int, bn: int) -> bool:
     return m % bm == 0 and c % bk == 0 and s % bn == 0
+
+
+def _tuned_blocks(op: str, m: int, c: int, r: int, s: int, dtype,
+                  freeze_group: Optional[int],
+                  blocks: Tuple[int, int, int]) -> Tuple[int, int, int]:
+    """Trace-time tuning-table consult (shapes are static under jit).
+
+    A hit overrides the policy blocks IF the winning blocks still divide
+    the actual shape (the table buckets m, so a 512-bucket winner may not
+    divide an m=384 call — then the requested blocks stand).  A miss, or
+    no active table, keeps the requested blocks: an empty table is never
+    worse than the legacy fixed config.
+    """
+    from repro.kernels import autotune  # deferred: autotune imports ops
+
+    table = autotune.get_table()
+    if table is None:
+        return blocks
+    e = table.lookup(op, m, c, r, s, dtype, freeze_phase=freeze_group)
+    if e is None or not _divisible(m, c, s, e.block_m, e.block_k, e.block_n):
+        return blocks
+    return (e.block_m, e.block_k, e.block_n)
 
 
 # --------------------------------------------------------------------------
@@ -269,6 +365,8 @@ def lowrank_apply(
     block_k: int = 512,
     block_n: int = 256,
     freeze_group: Optional[int] = None,
+    autotune: bool = False,
+    double_buffer: bool = False,
 ) -> jax.Array:
     """y = (x @ u) @ v for arbitrary-batch x (..., C)."""
     c, r = u.shape
@@ -278,6 +376,10 @@ def lowrank_apply(
     for d in lead:
         m *= d
     use = use_kernel if use_kernel is not None else (kernel_available() or interpret)
+    if autotune and use:
+        block_m, block_k, block_n = _tuned_blocks(
+            "lowrank_fwd", m, c, r, s, x.dtype, freeze_group,
+            (block_m, block_k, block_n))
     if use and _multi_device_mesh():
         # Multi-device mesh: the bare pallas_call would be replicated by
         # the partitioner (gathering every operand, frozen factors
@@ -294,11 +396,20 @@ def lowrank_apply(
                                      model_axis, block_m, block_k, block_n,
                                      interpret, freeze_group)
                 return y.reshape(*lead, s)
+            _note_fallback("lowrank_fwd", "mesh-indivisible-local", (m, c, s))
+        else:
+            _note_fallback("lowrank_fwd", "mesh-no-mapping", (m, c, s))
     elif use and _divisible(m, c, s, block_m, block_k, block_n):
         y = lowrank_matmul_vjp(x.reshape(m, c), u, v,
                                block_m, block_k, block_n, interpret,
-                               freeze_group)
+                               freeze_group, double_buffer)
         return y.reshape(*lead, s)
+    elif use:
+        _note_fallback("lowrank_fwd", "indivisible", (m, c, s))
+    else:
+        _note_fallback(
+            "lowrank_fwd",
+            "disabled" if use_kernel is not None else "platform", (m, c, s))
     # One freeze contract on all paths: stop_gradient the frozen factor so
     # a shape-dependent fallback can't silently train it.
     if freeze_group == 0:
@@ -468,6 +579,7 @@ def lowrank_ffn_apply(
     block_k: int = 512,
     block_n: int = 256,
     freeze_group: Optional[int] = None,
+    autotune: bool = False,
 ) -> jax.Array:
     """silu((x gu) gv) * ((x uu) uv) for arbitrary-batch x (..., C)."""
     c = gu.shape[0]
@@ -477,6 +589,10 @@ def lowrank_ffn_apply(
     for d in lead:
         m *= d
     use = use_kernel if use_kernel is not None else (kernel_available() or interpret)
+    if autotune and use:
+        block_m, block_k, block_n = _tuned_blocks(
+            "lowrank_ffn", m, c, gu.shape[1], f, x.dtype, freeze_group,
+            (block_m, block_k, block_n))
     if use and _multi_device_mesh():
         # same dispatch contract as lowrank_apply: under a multi-device
         # mesh the bare kernel path is forbidden — shard_map or jnp.
@@ -491,13 +607,109 @@ def lowrank_ffn_apply(
                                          block_m, block_k, block_n,
                                          interpret, freeze_group)
                 return y.reshape(*lead, f)
+            _note_fallback("lowrank_ffn", "mesh-indivisible-local", (m, c, f))
+        else:
+            _note_fallback("lowrank_ffn", "mesh-no-mapping", (m, c, f))
     elif use and _divisible(m, c, f, block_m, block_k, block_n):
         y = lowrank_ffn_vjp(x.reshape(m, c), gu, gv, uu, uv,
                             block_m, block_k, block_n, interpret, freeze_group)
         return y.reshape(*lead, f)
+    elif use:
+        _note_fallback("lowrank_ffn", "indivisible", (m, c, f))
+    else:
+        _note_fallback(
+            "lowrank_ffn",
+            "disabled" if use_kernel is not None else "platform", (m, c, f))
     if freeze_group == 0:
         gu, uu = jax.lax.stop_gradient(gu), jax.lax.stop_gradient(uu)
     elif freeze_group == 1:
         gv, uv = jax.lax.stop_gradient(gv), jax.lax.stop_gradient(uv)
     return ref.lowrank_gated_ffn_ref(x.reshape(m, c), gu, gv, uu, uv
                                      ).reshape(*lead, f)
+
+
+# --------------------------------------------------------------------------
+# int8 decode dispatchers (serving's rank-quantized export path)
+# --------------------------------------------------------------------------
+#
+# ``serving/export.py(quantize_factors="int8")`` stores weights as int8
+# values + per-output-column f32 scales.  These dispatchers consume them
+# natively: on TPU (or interpret mode) via the kernels in
+# ``kernels/int8_matmul.py`` — exact int32 accumulation, scales applied
+# post-accumulation over the (M, S) output; everywhere else via the
+# weight-only f32 formulation ``x @ (w_q.astype(f32) * w_scale)``, which
+# XLA-CPU fuses (convert + scale sink into the GEMM packing — measured
+# faster than scale-folding after the matmul) and which still beats the
+# bf16 dequantize-everything round trip it replaces.  The fallback skips
+# activation quantization (weight-only), so it is slightly MORE accurate
+# than the kernel path; parity tolerances live in tests/test_int8_decode.py.
+
+
+def int8_apply(x: jax.Array, w_q: jax.Array, w_scale: jax.Array, *,
+               use_kernel: bool | None = None, interpret: bool = False,
+               block_m: int = 256, block_k: int = 512, block_n: int = 256,
+               ) -> jax.Array:
+    """y = x @ dequant(w_q) for per-output-column int8 dense weights."""
+    c, s = w_q.shape
+    lead = x.shape[:-1]
+    m = 1
+    for d in lead:
+        m *= d
+    ws = w_scale.reshape(1, s).astype(jnp.float32)
+    use = use_kernel if use_kernel is not None else (kernel_available() or interpret)
+    if use and _multi_device_mesh():
+        _note_fallback("int8_dense", "mesh", (m, c, s))
+    elif use and _divisible(m, c, s, block_m, block_k, block_n):
+        x_q, x_scale = quantize_rowwise(x.reshape(m, c))
+        acc = int8_matmul(x_q, w_q, block_m=block_m, block_k=block_k,
+                          block_n=block_n, interpret=interpret)
+        y = acc.astype(jnp.float32) * x_scale * ws
+        return y.astype(x.dtype).reshape(*lead, s)
+    elif use:
+        _note_fallback("int8_dense", "indivisible", (m, c, s))
+    else:
+        _note_fallback(
+            "int8_dense",
+            "disabled" if use_kernel is not None else "platform", (m, c, s))
+    y = jnp.dot(x.reshape(m, c).astype(jnp.float32),
+                w_q.astype(jnp.float32) * ws)
+    return y.astype(x.dtype).reshape(*lead, s)
+
+
+def int8_lowrank_apply(x: jax.Array, u_q: jax.Array, u_scale: jax.Array,
+                       v_q: jax.Array, v_scale: jax.Array, *,
+                       use_kernel: bool | None = None,
+                       interpret: bool = False, block_m: int = 256,
+                       block_k: int = 512, block_n: int = 256) -> jax.Array:
+    """y = (x @ dequant(u_q)) @ dequant(v_q) for int8 factor pairs.
+
+    The kernel path fuses both int8 matmuls with an in-VMEM requantized
+    rank-r intermediate (per-row x scales factor out of the requantization
+    and are folded into the output here)."""
+    c, r = u_q.shape
+    s = v_q.shape[1]
+    lead = x.shape[:-1]
+    m = 1
+    for d in lead:
+        m *= d
+    us = u_scale.reshape(1, r).astype(jnp.float32)
+    vs = v_scale.reshape(1, s).astype(jnp.float32)
+    use = use_kernel if use_kernel is not None else (kernel_available() or interpret)
+    if use and _multi_device_mesh():
+        _note_fallback("int8_lowrank", "mesh", (m, c, s))
+    elif use and _divisible(m, c, s, block_m, block_k, block_n):
+        x_q, x_scale = quantize_rowwise(x.reshape(m, c))
+        y = int8_lowrank_matmul(x_q, u_q, us, v_q, vs, block_m=block_m,
+                                block_k=block_k, block_n=block_n,
+                                interpret=interpret)
+        return (y * x_scale).astype(x.dtype).reshape(*lead, s)
+    elif use:
+        _note_fallback("int8_lowrank", "indivisible", (m, c, s))
+    else:
+        _note_fallback(
+            "int8_lowrank",
+            "disabled" if use_kernel is not None else "platform", (m, c, s))
+    xf = x.reshape(m, c).astype(jnp.float32)
+    t = jnp.dot(xf, u_q.astype(jnp.float32) * us)
+    y = jnp.dot(t, v_q.astype(jnp.float32) * vs)
+    return y.astype(x.dtype).reshape(*lead, s)

@@ -339,7 +339,17 @@ def kernel_policy(run: RunConfig, phase: int = -1) -> KernelPolicy:
     ``phase`` is the sequential-freezing phase; group ``phase`` is frozen
     (u at phase 0, v at phase 1 — core/freezing.py), so the fused VJP skips
     that factor's backward kernel entirely.
+
+    With ``lrd.pallas_autotune`` the dispatchers consult the active
+    :class:`repro.kernels.autotune.TuningTable` at trace time;
+    ``lrd.pallas_autotune_table`` names the JSON to activate (loaded once —
+    an already-active table is never replaced, so a CLI/test that installed
+    its own table keeps it).
     """
+    if run.lrd.pallas_autotune and run.lrd.pallas_autotune_table:
+        from repro.kernels import autotune
+        if autotune.get_table() is None:
+            autotune.load_table(run.lrd.pallas_autotune_table)
     return KernelPolicy(
         use_pallas=run.lrd.use_pallas_kernel,
         freeze_group=freezing.frozen_group_for_phase(phase),
@@ -347,6 +357,9 @@ def kernel_policy(run: RunConfig, phase: int = -1) -> KernelPolicy:
         block_m=run.lrd.pallas_block_m,
         block_k=run.lrd.pallas_block_k,
         block_n=run.lrd.pallas_block_n,
+        autotune=run.lrd.pallas_autotune,
+        double_buffer=run.lrd.pallas_double_buffer,
+        int8_decode=run.lrd.int8_decode,
     )
 
 

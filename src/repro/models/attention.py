@@ -50,6 +50,39 @@ def dense_attention(q, k, v, *, causal: bool, q_offset: int = 0,
     return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
 
 
+def int8_dense_attention(q, k_q, k_scale, v_q, v_scale, *,
+                         kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Decode attention straight on int8 KV pools (DESIGN.md §11).
+
+    The per-(batch, position, head) quantization scales are rank-1 in the
+    (q, t) logit matrix, so they fold in AFTER the QKᵀ matmul (k) and into
+    the probabilities BEFORE the PV matmul (v) — no dequantized
+    (B, T, KV, hd) copy of either pool is ever materialized, where the
+    bf16 round trip materializes both per layer per step.  Algebraically
+    identical to dequantize-then-attend (same products, different
+    association), asserted ≤1e-5 in tests/test_int8_decode.py.
+
+    q: (B, Sq, H, D); k_q/v_q: (B, T, KV, D) int8; scales: (B, T, KV, 1).
+    """
+    b, sq, h, d = q.shape
+    t, kv = k_q.shape[1], k_q.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, d)
+    # (B, T, KV, 1) -> (B, KV, 1, 1, T): broadcast over (g, q), rank-1 in t
+    ks = jnp.moveaxis(k_scale[..., 0], 1, 2)[:, :, None, None, :]
+    vs = jnp.moveaxis(v_scale[..., 0], 1, 2)[:, :, None, None, :]
+    logits = jnp.einsum("bqkgd,btkd->bkgqt", qg, k_q,
+                        preferred_element_type=jnp.float32)
+    logits = logits * ks.astype(jnp.float32)
+    if kv_len is not None:
+        valid = jnp.arange(t)[None, :] < kv_len.reshape(-1, 1)
+        logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p * vs.astype(jnp.float32), v_q,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
 def blockwise_attention(q, k, v, *, causal: bool, block_q: int, block_kv: int) -> jax.Array:
     """Flash-style online-softmax attention in pure JAX.
 
@@ -210,13 +243,17 @@ def _paged_gather(pool: jax.Array, page_table: jax.Array) -> jax.Array:
     return flat[phys.reshape(b, mb * bs)]
 
 
-def _gqa_paged_update(cache: Params, k_new, v_new, rows) -> Tuple[Params, jax.Array, jax.Array]:
+def _gqa_paged_update(cache: Params, k_new, v_new, rows,
+                      *, native_int8: bool = False,
+                      ) -> Tuple[Params, Any, Any]:
     """Write this step's k/v into the paged pool and gather per-slot views.
 
     cache: {"k","v"[, "k_scale","v_scale"], "page_table"} with pools shaped
     (num_blocks, block_size, KV, hd) and page_table (B, max_blocks).
     Returns (new_cache, k_view, v_view) where the views are (B, Lmax, KV, *)
-    logical per-slot caches (dequantized when the pool is int8).
+    logical per-slot caches.  int8 pools: ``native_int8=True`` returns the
+    raw ``(values, scales)`` pairs for :func:`int8_dense_attention`;
+    otherwise the views are dequantized (legacy bf16 round trip).
     """
     pt = cache["page_table"]
     bs = cache["k"].shape[1]
@@ -232,6 +269,12 @@ def _gqa_paged_update(cache: Params, k_new, v_new, rows) -> Tuple[Params, jax.Ar
             "v_scale": _paged_write(cache["v_scale"], vs, phys),
             "page_table": pt,
         }
+        if native_int8:
+            k_view = (_paged_gather(new_cache["k"], pt),
+                      _paged_gather(new_cache["k_scale"], pt))
+            v_view = (_paged_gather(new_cache["v"], pt),
+                      _paged_gather(new_cache["v_scale"], pt))
+            return new_cache, k_view, v_view
         k_view = kvq.dequantize_kv(_paged_gather(new_cache["k"], pt),
                                    _paged_gather(new_cache["k_scale"], pt),
                                    k_new.dtype)
@@ -334,21 +377,27 @@ def gqa_apply(
             pos_arr = jnp.asarray(pos)
             length = (pos_arr + 1).astype(jnp.int32).reshape(-1)
             rows, start = _row_positions(pos, b)
+            from repro.kernels import ops as kops
+            native_int8 = kops.as_policy(use_pallas).int8_decode == "native"
             if "page_table" in cache:  # paged block pool (DESIGN.md §8)
                 if rows is None:
                     rows = jnp.broadcast_to(start, (b,))
                 new_cache, k_cache, v_cache = _gqa_paged_update(
-                    cache, k_new, v_new, rows)
+                    cache, k_new, v_new, rows, native_int8=native_int8)
             elif "k_scale" in cache:  # int8-quantized cache (§Perf C2)
                 from repro.models import kvcache as kvq
                 new_cache = kvq.update_quantized_kv(
                     cache, k_new, v_new, rows if rows is not None else start)
                 new_cache = {kk: shard(vv, "batch", "kv_seq", "kv_heads", None)
                              for kk, vv in new_cache.items()}
-                k_cache = kvq.dequantize_kv(new_cache["k"], new_cache["k_scale"],
-                                            x.dtype)
-                v_cache = kvq.dequantize_kv(new_cache["v"], new_cache["v_scale"],
-                                            x.dtype)
+                if native_int8:
+                    k_cache = (new_cache["k"], new_cache["k_scale"])
+                    v_cache = (new_cache["v"], new_cache["v_scale"])
+                else:
+                    k_cache = kvq.dequantize_kv(new_cache["k"],
+                                                new_cache["k_scale"], x.dtype)
+                    v_cache = kvq.dequantize_kv(new_cache["v"],
+                                                new_cache["v_scale"], x.dtype)
             else:
                 if rows is not None:  # slot-indexed: per-row write offsets
                     k_cache = _update_rows(cache["k"], k_new, rows)
@@ -361,7 +410,13 @@ def gqa_apply(
                 k_cache = shard(k_cache, "batch", "kv_seq", "kv_heads", None)
                 v_cache = shard(v_cache, "batch", "kv_seq", "kv_heads", None)
                 new_cache = {"k": k_cache, "v": v_cache}
-            out = dense_attention(q, k_cache, v_cache, causal=False, kv_len=length)
+            if isinstance(k_cache, tuple):  # native int8: raw pools + scales
+                out = int8_dense_attention(q, k_cache[0], k_cache[1],
+                                           v_cache[0], v_cache[1],
+                                           kv_len=length)
+            else:
+                out = dense_attention(q, k_cache, v_cache, causal=False,
+                                      kv_len=length)
 
     out = out.reshape(b, s, h * hd)
     out = shard(out, "batch", "seq", "heads")

@@ -29,16 +29,21 @@ def linear(p: Params, x: jax.Array, *,
     model forwards it verbatim, so the launch layer sets it once per
     compiled step (see launch/steps.py).
     """
+    pol = kops.as_policy(use_pallas)
     if "kernel" in p:
         y = jnp.dot(x, p["kernel"], preferred_element_type=jnp.float32).astype(x.dtype)
+    elif "kernel_q" in p:
+        y = _int8_dense(p, x, pol)
+    elif "u_q" in p:
+        y = _int8_lowrank(p, x, pol)
     else:
         u, v = p["u"], p["v"]
-        pol = kops.as_policy(use_pallas)
         if pol.use_pallas:
             y = kops.lowrank_apply(
                 x, u, v, interpret=pol.interpret,
                 block_m=pol.block_m, block_k=pol.block_k, block_n=pol.block_n,
-                freeze_group=pol.freeze_group)
+                freeze_group=pol.freeze_group, autotune=pol.autotune,
+                double_buffer=pol.double_buffer)
         else:
             t = jnp.dot(x, u, preferred_element_type=jnp.float32).astype(x.dtype)
             y = jnp.dot(t, v, preferred_element_type=jnp.float32).astype(x.dtype)
@@ -47,8 +52,49 @@ def linear(p: Params, x: jax.Array, *,
     return y
 
 
+def _int8_dense(p: Params, x: jax.Array, pol: "kops.KernelPolicy") -> jax.Array:
+    """int8-exported dense kernel (serving/export.py quantize_factors).
+
+    ``int8_decode="native"`` consumes the int8 values directly (TPU/interpret:
+    exact-int32 Pallas kernel; elsewhere the weight-only f32 formulation) —
+    ``"bf16"`` is the legacy round trip that dequantizes the full weight and
+    runs a bf16 GEMM, kept as the serve-bench baseline."""
+    if pol.int8_decode == "bf16":
+        w = (p["kernel_q"].astype(jnp.float32)
+             * p["kernel_scale"].astype(jnp.float32)).astype(jnp.bfloat16)
+        return jnp.dot(x.astype(jnp.bfloat16), w,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    return kops.int8_apply(
+        x, p["kernel_q"], p["kernel_scale"],
+        use_kernel=None if pol.use_pallas else False,
+        interpret=pol.interpret, block_m=pol.block_m, block_k=pol.block_k,
+        block_n=pol.block_n)
+
+
+def _int8_lowrank(p: Params, x: jax.Array, pol: "kops.KernelPolicy") -> jax.Array:
+    """int8-exported factor pair — same decode-mode contract as
+    :func:`_int8_dense`; the native TPU path is the fused requantizing
+    kernel (kernels/int8_matmul.int8_lowrank_matmul)."""
+    if pol.int8_decode == "bf16":
+        u = (p["u_q"].astype(jnp.float32)
+             * p["u_scale"].astype(jnp.float32)).astype(jnp.bfloat16)
+        v = (p["v_q"].astype(jnp.float32)
+             * p["v_scale"].astype(jnp.float32)).astype(jnp.bfloat16)
+        t = jnp.dot(x.astype(jnp.bfloat16), u,
+                    preferred_element_type=jnp.float32).astype(jnp.bfloat16)
+        return jnp.dot(t, v, preferred_element_type=jnp.float32).astype(x.dtype)
+    return kops.int8_lowrank_apply(
+        x, p["u_q"], p["u_scale"], p["v_q"], p["v_scale"],
+        use_kernel=None if pol.use_pallas else False,
+        interpret=pol.interpret, block_m=pol.block_m, block_k=pol.block_k,
+        block_n=pol.block_n)
+
+
 def out_features(p: Params) -> int:
-    return (p["kernel"] if "kernel" in p else p["v"]).shape[-1]
+    for k in ("kernel", "kernel_q", "v", "v_q"):
+        if k in p:
+            return p[k].shape[-1]
+    raise KeyError(f"no weight leaf in {sorted(p)}")
 
 
 # --------------------------------------------------------------------------
@@ -166,7 +212,7 @@ def ffn(p: Params, x: jax.Array, *,
                 x, p["gate"]["u"], p["gate"]["v"], p["up"]["u"], p["up"]["v"],
                 interpret=pol.interpret, block_m=pol.block_m,
                 block_k=pol.block_k, block_n=pol.block_n,
-                freeze_group=pol.freeze_group)
+                freeze_group=pol.freeze_group, autotune=pol.autotune)
         else:
             g = linear(p["gate"], x, use_pallas=use_pallas)
             u = linear(p["up"], x, use_pallas=use_pallas)

@@ -51,6 +51,7 @@ class LayerExport:
     merged: bool  # Algorithm-1 guard: True -> served dense
     original_time: float
     decomposed_time: float
+    quantized: bool = False  # int8 factor/kernel quantization applied
 
     @property
     def speedup(self) -> float:
@@ -105,6 +106,7 @@ def export_for_serving(
     stride: int = 1,
     min_rank: int = 1,
     measured_dtype=None,
+    quantize_factors: Optional[str] = None,
 ) -> Tuple[Any, ExportReport]:
     """Rank-quantize a trained param tree for serving.
 
@@ -115,9 +117,28 @@ def export_for_serving(
     kernels, Tucker conv groups, folded-BN conv groups, norms, and
     embeddings pass through untouched, and expert-stacked groups truncate
     but never merge (see ``rewrite``).
+
+    ``quantize_factors="int8"`` additionally stores every rewritten group
+    as int8 values + per-output-column f32 scales (``u_q``/``u_scale``,
+    ``v_q``/``v_scale``; guard-merged kernels as ``kernel_q``/
+    ``kernel_scale``) — the artifact the engine decodes natively through
+    ``kernels/ops.int8_apply`` / ``int8_lowrank_apply`` instead of
+    round-tripping every weight to bf16 per step (DESIGN.md §11).
     """
+    assert quantize_factors in (None, "int8"), quantize_factors
     report = ExportReport(backend=backend)
     cache: Dict = {}
+
+    def _quantize_group(group: Dict[str, Any]) -> Dict[str, Any]:
+        from repro.kernels.int8_matmul import quantize_colwise
+        out = dict(group)
+        if "kernel" in out:
+            out["kernel_q"], out["kernel_scale"] = quantize_colwise(
+                out.pop("kernel"))
+        else:
+            out["u_q"], out["u_scale"] = quantize_colwise(out.pop("u"))
+            out["v_q"], out["v_scale"] = quantize_colwise(out.pop("v"))
+        return out
 
     def rewrite(path: str, group: Dict[str, Any]) -> Dict[str, Any]:
         u, v = group["u"], group["v"]
@@ -139,14 +160,18 @@ def export_for_serving(
             path=path, shape=(c, s), rank_train=r_train, rank_serve=r_serve,
             merged=merged,
             original_time=dec.original_time,
-            decomposed_time=dec.decomposed_time)
+            decomposed_time=dec.decomposed_time,
+            quantized=quantize_factors is not None)
         if merged:  # Algorithm-1 guard: serve dense
-            return merge_factor_group(group)
-        if not dec.use_decomposed or r_serve >= r_train:
-            return group
-        u2, v2 = svd.truncate_factors(u, v, r_serve)
-        out = dict(group)
-        out["u"], out["v"] = u2, v2
+            out = merge_factor_group(group)
+        elif not dec.use_decomposed or r_serve >= r_train:
+            out = group
+        else:
+            u2, v2 = svd.truncate_factors(u, v, r_serve)
+            out = dict(group)
+            out["u"], out["v"] = u2, v2
+        if quantize_factors == "int8":
+            out = _quantize_group(out)
         return out
 
     return map_factor_groups(params, rewrite), report
