@@ -36,12 +36,25 @@ def record(name: str, rows, out_dir: str = "benchmarks/results") -> str:
 
     Every script's ``main()`` returns its row dicts; ``run.py`` funnels them
     through here so perf numbers are diffable across PRs.  Returns the path.
+
+    Beside the JSON, the same rows are mirrored as schema-versioned
+    telemetry events (``BENCH_<name>.events.jsonl``, one ``bench_row``
+    per row — repro.obs.schema): benchmark output and live training/
+    serving telemetry share one schema, so ``analysis/obs_report.py``
+    and any JSONL consumer read both without a second parser.
     """
     import json
     import pathlib
+
+    from repro.obs import EventLog
 
     p = pathlib.Path(out_dir)
     p.mkdir(parents=True, exist_ok=True)
     path = p / f"BENCH_{name}.json"
     path.write_text(json.dumps(rows, indent=1, default=str))
+    with EventLog(p / f"BENCH_{name}.events.jsonl") as log:
+        log.emit("run_start", kind="bench", bench=name)
+        for row in rows:
+            log.emit("bench_row", bench=name, row=row)
+        log.emit("run_end", kind="bench", bench=name, rows=len(rows))
     return str(path)

@@ -440,3 +440,28 @@ def collective_shapes(text: str) -> List[Tuple[str, str, Tuple[int, ...]]]:
                 shape = tuple(int(d) for d in dims.split(",") if d)
                 out.append((base, dt, shape))
     return out
+
+
+#: Collective classes that synchronize devices inside a train step — the
+#: set every sync-bytes number in this repo (benchmarks/shard_scaling.py,
+#: benchmarks/rank_adaptation.py, the telemetry layer) filters to, so the
+#: figures are comparable across all three.  collective-permute is
+#: excluded: it is point-to-point routing, not a step-blocking sync.
+SYNC_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all")
+
+
+def sync_bytes(text: str, classes=SYNC_COLLECTIVES):
+    """Cross-device sync bytes of one execution of a compiled program.
+
+    Returns ``(total_bytes, {class: bytes})`` summed over the collective
+    classes in ``classes``, trip-count-aware (a collective inside a
+    scanned layer stack counts once per trip) — the same accounting the
+    committed ``BENCH_shard_scaling.json`` / ``BENCH_rank_adaptation.json``
+    columns use, so telemetry reproduces them rather than inventing a
+    second methodology.  Use :func:`collective_shapes` for the per-
+    instruction breakdown.
+    """
+    per = {k: int(v) for k, v in analyze_hlo(text).collective_bytes.items()
+           if k in classes}
+    return sum(per.values()), per

@@ -8,4 +8,5 @@ stand-ins for the dry-run (no allocation).
 from repro.configs.archs import (ARCHS, get_config, get_smoke_config,  # noqa: F401
                                  shape_cells, skip_reason)
 from repro.configs.base import (SHAPES, DistConfig, LRDConfig, ModelConfig,  # noqa: F401
-                                OptimConfig, RunConfig, ShapeConfig)
+                                ObsConfig, OptimConfig, RunConfig,
+                                ShapeConfig)

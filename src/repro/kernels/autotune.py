@@ -50,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis import roofline
+from repro.obs import registry as obs_registry
 
 __all__ = [
     "TuneEntry", "TuningTable", "time_fn", "candidate_blocks",
@@ -119,6 +120,11 @@ class TuningTable:
                  path: Optional[str] = None):
         self.entries: Dict[Tuple, TuneEntry] = dict(entries or {})
         self.path = path
+        # per-table lookup outcomes; the same counts also feed the
+        # ``autotune_lookups{op, result}`` counter in the default metrics
+        # registry (repro.obs) so dispatch-time table efficacy is visible
+        # alongside the kernel-fallback counters
+        self.stats = {"hit": 0, "miss": 0, "stale": 0}
 
     def __len__(self) -> int:
         return len(self.entries)
@@ -133,8 +139,14 @@ class TuningTable:
         are treated as misses (re-tuning overwrites them in place)."""
         kind = kind or device_kind()
         e = self.entries.get(_key(op, m, c, r, s, dtype, kind, freeze_phase))
+        result = "hit" if e is not None else "miss"
         if e is not None and e.device_kind != kind:
-            return None
+            e, result = None, "stale"
+        self.stats[result] += 1
+        obs_registry.default_registry().counter(
+            "autotune_lookups",
+            "TuningTable consults at dispatch/search time").inc(
+                op=op, result=result)
         return e
 
     def put(self, op: str, m: int, c: int, r: int, s: int, dtype,

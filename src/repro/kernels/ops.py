@@ -44,6 +44,7 @@ from repro.kernels.lowrank_bwd import (lowrank_matmul_du, lowrank_matmul_dv,
                                        lowrank_matmul_dx)
 from repro.kernels.lowrank_ffn import lowrank_gated_ffn
 from repro.kernels.lowrank_matmul import lowrank_matmul
+from repro.obs import registry as obs_registry
 
 __all__ = [
     "KernelPolicy", "as_policy", "kernel_available",
@@ -68,6 +69,14 @@ _log = logging.getLogger(__name__)
 # the context is open (dispatch runs in Python at trace time, so notes fire
 # exactly when a call traces); kernels/autotune.py refuses to mint a
 # ``source="measured"`` entry whenever the capture is non-empty.
+#
+# Beyond the capture context, every fallback ALSO (a) increments the
+# ``kernel_fallbacks{op, reason}`` counter in the default metrics registry
+# (repro.obs — visible in production paths, not only tests) and (b) logs
+# once per unique (op, reason, shape): at WARNING for reasons that mean a
+# kernel the caller asked for silently degraded (indivisible blocks, mesh
+# mapping failures), at DEBUG for the expected ones ("platform" off-TPU,
+# "disabled" by policy) so CPU runs aren't spammed.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,14 +103,25 @@ def capture_fallbacks():
         _FALLBACK_SINKS.remove(sink)
 
 
+# reasons that are expected on the current host/policy — everything else
+# means a kernel the caller explicitly requested quietly degraded
+_EXPECTED_FALLBACK_REASONS = ("platform", "disabled")
+
+
 def _note_fallback(op: str, reason: str, shape: Tuple[int, ...] = ()) -> None:
     fb = Fallback(op, reason, tuple(int(d) for d in shape))
     for sink in _FALLBACK_SINKS:
         sink.append(fb)
-    if (op, reason) not in _LOGGED_FALLBACKS:  # once per (op, reason)
-        _LOGGED_FALLBACKS.add((op, reason))
-        _log.debug("kernel fallback: op=%s reason=%s shape=%s",
-                   op, reason, shape)
+    obs_registry.default_registry().counter(
+        "kernel_fallbacks",
+        "dispatcher took the jnp reference path").inc(op=op, reason=reason)
+    key = (op, reason, fb.shape)
+    if key not in _LOGGED_FALLBACKS:  # once per unique (op, reason, shape)
+        _LOGGED_FALLBACKS.add(key)
+        level = (logging.DEBUG if reason in _EXPECTED_FALLBACK_REASONS
+                 else logging.WARNING)
+        _log.log(level, "kernel fallback: op=%s reason=%s shape=%s "
+                 "(jnp reference path used)", op, reason, fb.shape)
 
 
 @dataclasses.dataclass(frozen=True)

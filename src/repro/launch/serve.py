@@ -19,10 +19,13 @@ import time
 import jax
 import numpy as np
 
+from pathlib import Path
+
 from repro.configs import get_config, get_smoke_config
 from repro.configs.base import DistConfig, LRDConfig, RunConfig, ShapeConfig
 from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_host_mesh
+from repro.obs import EventLog
 from repro.serving import ServeEngine
 
 
@@ -58,7 +61,27 @@ def main(argv=None):
                     help="serve the rank-quantized Algorithm-1 artifact")
     ap.add_argument("--eos-id", type=int, default=-1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--obs", action="store_true",
+                    help="write per-request/per-step telemetry JSONL "
+                         "(events.jsonl in --obs-dir; DESIGN.md §12)")
+    ap.add_argument("--obs-dir", default="runs/serve_obs",
+                    help="telemetry directory for --obs")
+    ap.add_argument("--log-format", default="text",
+                    choices=["text", "jsonl"],
+                    help="with jsonl, mirror every event to the console")
     args = ap.parse_args(argv)
+
+    obs = None
+    if args.obs or args.log_format == "jsonl":
+        path = None
+        if args.obs:
+            obs_dir = Path(args.obs_dir)
+            obs_dir.mkdir(parents=True, exist_ok=True)
+            path = obs_dir / "events.jsonl"
+        # serving events have no legacy text lines, so a text-format
+        # mirror stays silent; jsonl mirrors the raw events
+        obs = EventLog(path, mirror=print if args.log_format == "jsonl"
+                       else None, fmt=args.log_format)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     max_len = args.max_len or (args.prompt_len + args.max_new)
@@ -83,17 +106,25 @@ def main(argv=None):
                              num_slots=args.slots,
                              prefill_len=args.prompt_len,
                              block_size=args.block_size,
-                             num_blocks=args.num_blocks or None)
+                             num_blocks=args.num_blocks or None,
+                             obs=obs)
         trace = poisson_trace(args.requests, args.rate, args.prompt_len,
                               cfg.vocab_size, args.seed)
         for r in trace:
             r["max_new"] = args.max_new
             if args.eos_id >= 0:
                 r["eos_id"] = args.eos_id
+        if obs is not None:
+            obs.emit("run_start", _mirror=False, kind="serve",
+                     arch=cfg.name, slots=args.slots,
+                     requests=args.requests, rate=args.rate)
         t0 = time.perf_counter()
         outs = engine.serve(trace)
         dt = time.perf_counter() - t0
         stats = engine.scheduler.latency_stats()
+        if obs is not None:
+            obs.emit("run_end", _mirror=False, kind="serve", **stats)
+            obs.close()
         print(f"{len(outs)} requests, "
               f"{int(stats['generated_tokens'])} tokens in {dt:.2f}s "
               f"({stats['tok_per_s']:.1f} tok/s; layout "
@@ -101,7 +132,9 @@ def main(argv=None):
               f"{engine.scheduler.decode_compiles} decode compile)")
         print(f"latency p50 {stats['p50_latency_s'] * 1e3:.0f}ms  "
               f"p95 {stats['p95_latency_s'] * 1e3:.0f}ms  "
+              f"p99 {stats['p99_latency_s'] * 1e3:.0f}ms  "
               f"first-token p50 {stats['p50_first_token_s'] * 1e3:.0f}ms  "
+              f"queue-wait p50 {stats['p50_queue_wait_s'] * 1e3:.0f}ms  "
               f"preemptions {int(stats['preemptions'])}")
         print("sample:", outs[0][:16].tolist())
         return outs

@@ -86,6 +86,28 @@ def make_train_state(optim_cfg, params, phase: int = -1):
             init_moments(optim_cfg, frozen, on_host=True))
 
 
+def _tree_bytes(tree) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        size = getattr(leaf, "size", None)
+        if size is None:  # non-array leaf (python scalar step count)
+            continue
+        total += int(size) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def partition_bytes(state: TrainState) -> Dict[str, int]:
+    """Live bytes of each partition of the CONCRETE state (telemetry,
+    DESIGN.md §12): what the per-step ``trainable/frozen/opt`` records and
+    the rank-adaptation benchmark both report, so the freeze-phase and
+    rank-truncation savings are observable per step, not just asserted by
+    ``abstract_state``.  Parked host moments are excluded — they hold no
+    device memory by contract."""
+    return {"trainable_bytes": _tree_bytes(state.trainable),
+            "frozen_bytes": _tree_bytes(state.frozen),
+            "opt_bytes": _tree_bytes(state.opt)}
+
+
 def _park(tree):
     """Move moment leaves to host numpy (releases the device buffers)."""
     return jax.tree_util.tree_map(

@@ -44,15 +44,17 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro.analysis import hlo as hlo_mod
 from repro.checkpoint import (CheckpointManager, pack_phased_state,
                               unpack_phased_state)
 from repro.core import rank_adapt
 from repro.configs import SHAPES, get_config, get_smoke_config
-from repro.configs.base import (DistConfig, LRDConfig, OptimConfig, RunConfig,
-                                ShapeConfig)
+from repro.configs.base import (DistConfig, LRDConfig, ObsConfig, OptimConfig,
+                                RunConfig, ShapeConfig)
 from repro.data import LMBatchIterator
 from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.obs import EventLog
 from repro.optim.optimizers import OptState
 
 
@@ -82,9 +84,24 @@ class StragglerMonitor:
         return False
 
 
+def _parse_profile_steps(spec: str):
+    """``"START:STOP"`` -> (start, stop) step indices, or (-1, -1)."""
+    if not spec:
+        return -1, -1
+    try:
+        a, b = spec.split(":")
+        start, stop = int(a), int(b)
+    except ValueError:
+        raise SystemExit(f"--profile-steps expects START:STOP, got {spec!r}")
+    if start < 0 or stop <= start:
+        raise SystemExit(f"--profile-steps needs 0 <= START < STOP, got {spec!r}")
+    return start, stop
+
+
 def build_run(args) -> RunConfig:
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     shape = ShapeConfig("custom", args.seq_len, args.global_batch, "train")
+    prof_start, prof_stop = _parse_profile_steps(args.profile_steps)
     return RunConfig(
         model=cfg,
         shape=shape,
@@ -104,6 +121,10 @@ def build_run(args) -> RunConfig:
         optim=OptimConfig(name=args.optimizer, lr=args.lr,
                           warmup_steps=args.warmup,
                           total_steps=args.steps),
+        obs=ObsConfig(enabled=args.obs, run_dir=args.obs_dir,
+                      log_format=args.log_format,
+                      step_every=args.obs_step_every,
+                      profile_start=prof_start, profile_stop=prof_stop),
         seed=args.seed,
     )
 
@@ -156,6 +177,21 @@ def main(argv=None):
     ap.add_argument("--save-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--obs", action="store_true",
+                    help="write schema-versioned telemetry JSONL "
+                         "(events.jsonl in --obs-dir; DESIGN.md §12)")
+    ap.add_argument("--obs-dir", default="",
+                    help="telemetry directory (default: the run's "
+                         "checkpoint directory)")
+    ap.add_argument("--log-format", default="text",
+                    choices=["text", "jsonl"],
+                    help="console mirror: legacy text lines (default) or "
+                         "the raw JSONL events")
+    ap.add_argument("--obs-step-every", type=int, default=1,
+                    help="emit a train_step record every N steps")
+    ap.add_argument("--profile-steps", default="",
+                    help="START:STOP — jax.profiler trace window over "
+                         "these steps (saved under the obs dir)")
     args = ap.parse_args(argv)
 
     run = build_run(args)
@@ -167,6 +203,16 @@ def main(argv=None):
         mesh = make_host_mesh(data_ways, args.mesh_model)
     print(f"[mesh] {dict(zip(mesh.axis_names, mesh.devices.shape))} "
           f"({mesh.devices.size} device(s))")
+
+    # telemetry: one events.jsonl per run when --obs; the console mirror
+    # renders the legacy [phase]/[rank-adapt]/[straggler]/[resume]/per-step
+    # lines either way, so disabling telemetry changes no console output
+    obs_dir = Path(run.obs.run_dir) if run.obs.run_dir else (
+        Path(args.ckpt_dir) / f"{run.model.name}")
+    if run.obs.enabled:
+        obs_dir.mkdir(parents=True, exist_ok=True)
+    obs = EventLog(obs_dir / "events.jsonl" if run.obs.enabled else None,
+                   mirror=print, fmt=run.obs.log_format)
 
     params, plan = steps_mod.init_params(run)
     if run.lrd.enabled:
@@ -216,30 +262,54 @@ def main(argv=None):
         parked = tuple(jax.tree_util.tree_map(np.asarray, t) for t in parked_h)
         data.load_state_dict(extra["data"])
         src = extra.get("mesh", {})
-        print(f"[resume] from step {start_step} (phase {cur_phase}, "
-              f"saved on mesh {src.get('shape', '?')} -> "
-              f"restored onto {mesh_info['shape']})")
+        obs.emit("resume", step=start_step, phase=cur_phase,
+                 src_mesh=src.get("shape", "?"), mesh=mesh_info["shape"])
+
+    obs.emit("run_start", _mirror=False, kind="train", arch=run.model.name,
+             steps=args.steps, steps_per_epoch=args.steps_per_epoch,
+             start_step=start_step, mesh=mesh_info,
+             freeze_mode=run.lrd.freeze_mode,
+             rank_schedule=run.lrd.rank_schedule)
 
     train_step = steps_mod.build_train_step(run, mesh)
     step_fns = {}
+    sync_cache = {}  # phase -> compiled step's cross-device sync bytes
 
     def fn_for(phase: int, batch):
         # one executable per phase, with explicit shardings: the state is
         # DONATED, so in_shardings == out_shardings lets every updated
         # buffer alias its predecessor.  Batch shardings are derived from
         # the iterator's actual structure, not the family's full spec set.
+        # Compiled ahead of time so the telemetry layer can read the
+        # optimized HLO off the same executable the loop runs (no second
+        # compile for the per-phase sync-bytes attribution).
         if phase not in step_fns:
             shs = steps_mod.state_shardings(run, mesh, state)
-            step_fns[phase] = jax.jit(
+            compiled = jax.jit(
                 functools.partial(train_step, phase=phase),
                 donate_argnums=(0,),
                 in_shardings=(shs, steps_mod.batch_shardings(batch, mesh)),
-                out_shardings=(shs, None))
+                out_shardings=(shs, None)).lower(state, batch).compile()
+            step_fns[phase] = compiled
+            if run.obs.enabled:
+                total, per = ((0, {}) if mesh.devices.size <= 1 else
+                              hlo_mod.sync_bytes(compiled.as_text()))
+                sync_cache[phase] = total
+                obs.emit("phase_compile", _mirror=False, phase=phase,
+                         sync_bytes_per_step=total, collectives=per)
         return step_fns[phase]
 
     monitor = StragglerMonitor()
     it = iter(data)
     losses = []
+    # per-phase-segment facts attached to every train_step record; all
+    # three only change at a phase swap, so they are cached, not recomputed
+    # per step (the enabled path must stay cheap, the disabled path free)
+    cur_ranks = rank_adapt.live_rank_map(state.params)
+    part_bytes = steps_mod.partition_bytes(state)
+    tokens_per_step = run.shape.global_batch * run.shape.seq_len
+    profiling = False
+    prof_dir = str(obs_dir / "profile")
     for step in range(start_step, args.steps):
         epoch = step // args.steps_per_epoch
         phase = phase_at(step)
@@ -249,39 +319,59 @@ def main(argv=None):
             # group's leaves are re-placed — DESIGN.md §9).  With an active
             # rank schedule the same swap truncates scheduled factor groups
             # and slices their moments (DESIGN.md §10).
-            ranks_before = rank_adapt.live_rank_map(state.params)
-            state, parked = steps_mod.repartition_state(
-                run.optim, state, parked, phase, mesh=mesh, run=run,
-                schedule=schedule if schedule.active else None,
-                boundary=epoch // max(args.epochs_per_phase, 1))
+            boundary = epoch // max(args.epochs_per_phase, 1)
+            ranks_before = cur_ranks
+            with obs.span("phase_swap", epoch=epoch, phase=phase,
+                          boundary=boundary):
+                state, parked = steps_mod.repartition_state(
+                    run.optim, state, parked, phase, mesh=mesh, run=run,
+                    schedule=schedule if schedule.active else None,
+                    boundary=boundary)
             cur_phase = phase
-            print(f"[phase] epoch {epoch}: now training group {1 - phase}, "
-                  f"group {phase} frozen out of the step")
-            ranks_after = rank_adapt.live_rank_map(state.params)
-            if ranks_after != ranks_before:
+            cur_ranks = rank_adapt.live_rank_map(state.params)
+            part_bytes = steps_mod.partition_bytes(state)
+            if cur_ranks != ranks_before:
                 # shapes changed: every cached executable (and its
                 # in_shardings, resolved against the OLD shapes) is stale
                 step_fns.clear()
+                sync_cache.clear()
                 shrunk = {p: f"{ranks_before[p]}->{r}"
-                          for p, r in ranks_after.items()
+                          for p, r in cur_ranks.items()
                           if r != ranks_before[p]}
-                print(f"[rank-adapt] boundary truncated {len(shrunk)} "
-                      f"group(s): {shrunk}")
+                obs.emit("rank_adapt", epoch=epoch, boundary=boundary,
+                         shrunk=shrunk, rank_map=cur_ranks)
+        if run.obs.profile_start == step and not profiling:
+            try:
+                jax.profiler.start_trace(prof_dir)
+                profiling = True
+            except Exception as e:  # profiler backend unavailable
+                print(f"[profile] start_trace failed: {e}")
         batch = steps_mod.shard_batch(next(it), mesh)
         t0 = time.perf_counter()
         state, metrics = fn_for(phase, batch)(state, batch)
         loss = float(metrics["loss"])
         dt = time.perf_counter() - t0
         losses.append(loss)
+        if profiling and step + 1 >= run.obs.profile_stop:
+            jax.profiler.stop_trace()
+            profiling = False
+            obs.emit("profile_window", start_step=run.obs.profile_start,
+                     stop_step=step + 1, trace_dir=prof_dir)
         if step == start_step:
             steps_mod.check_state_placement(run, mesh, state)
         if monitor.observe(dt):
-            print(f"[straggler] step {step}: {dt*1e3:.0f}ms "
-                  f"(median {np.median(monitor.times)*1e3:.0f}ms)")
-        if step % args.log_every == 0 or step == args.steps - 1:
-            print(f"step {step:5d} epoch {epoch:3d} phase {phase:2d} "
-                  f"loss {loss:.4f} gnorm {float(metrics['grad_norm']):.3f} "
-                  f"{dt*1e3:.0f}ms")
+            obs.emit("straggler", step=step, step_time_s=dt,
+                     median_s=float(np.median(monitor.times)))
+        record = run.obs.enabled and step % max(run.obs.step_every, 1) == 0
+        mirror = step % args.log_every == 0 or step == args.steps - 1
+        if record or mirror:
+            obs.emit("train_step", _mirror=mirror, step=step, epoch=epoch,
+                     phase=phase, loss=loss,
+                     grad_norm=float(metrics["grad_norm"]),
+                     step_time_s=dt, tokens_per_s=tokens_per_step / dt,
+                     total_rank=sum(cur_ranks.values()), rank_map=cur_ranks,
+                     sync_bytes_per_step=sync_cache.get(phase, 0),
+                     **part_bytes)
         if ckpt.due(step + 1) and ckpt.maybe_save(
                 step + 1, pack_phased_state(state, parked),
                 extra={"data": data.state_dict(), "phase": phase,
@@ -289,8 +379,19 @@ def main(argv=None):
                        "rank_map": rank_adapt.live_rank_map(state.params)}):
             if ckpt.preempted:
                 print(f"[preempt] checkpointed at step {step + 1}, exiting")
+                obs.emit("run_end", _mirror=False, kind="train",
+                         reason="preempt", final_step=step + 1)
+                obs.close()
                 return state, losses
+    if profiling:
+        jax.profiler.stop_trace()
+        obs.emit("profile_window", start_step=run.obs.profile_start,
+                 stop_step=args.steps, trace_dir=prof_dir)
     print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    obs.emit("run_end", _mirror=False, kind="train", reason="complete",
+             final_step=args.steps,
+             final_loss=losses[-1] if losses else 0.0)
+    obs.close()
     return state, losses
 
 

@@ -1,0 +1,9 @@
+"""CLI: validate telemetry JSONL files against the event schema.
+
+    python -m repro.obs run_dir/events.jsonl [more.jsonl ...]
+"""
+
+from repro.obs.schema import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

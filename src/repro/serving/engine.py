@@ -94,6 +94,7 @@ class ServeEngine:
     prefill_len: Optional[int] = None
     block_size: int = 16
     num_blocks: Optional[int] = None
+    obs: Any = None  # optional repro.obs.EventLog, handed to the scheduler
 
     def __post_init__(self):
         self._prefill = jax.jit(steps_mod.build_prefill_step(self.run, self.mesh))
@@ -111,7 +112,7 @@ class ServeEngine:
                 self.run, self.params, self.mesh,
                 num_slots=self.num_slots, max_len=self.max_len,
                 prefill_len=self.prefill_len, block_size=self.block_size,
-                num_blocks=self.num_blocks)
+                num_blocks=self.num_blocks, obs=self.obs)
         return self._scheduler
 
     def _scheduler_usable(self, extras, prompt_len=0, max_new=0) -> bool:

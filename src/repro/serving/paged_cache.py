@@ -99,9 +99,17 @@ class PageTableManager:
         # bumped on every table mutation — lets the scheduler skip the
         # host->device table upload on steps where nothing changed
         self.version = 0
+        # most blocks ever simultaneously held (telemetry: the pool size a
+        # non-oversubscribed run of this workload would have needed)
+        self.high_water = 0
 
     def allocated(self, slot: int) -> int:
         return len(self._slot_blocks[slot])
+
+    @property
+    def used_blocks(self) -> int:
+        """Blocks currently held by slots (sink block excluded)."""
+        return self.allocator.num_blocks - 1 - self.allocator.free_blocks
 
     def admit(self, slot: int, length: int) -> bool:
         """Allocate pages covering ``length`` positions for a fresh slot."""
@@ -119,6 +127,7 @@ class PageTableManager:
         self.table[slot, :] = 0
         self.table[slot, :need] = blocks
         self.version += 1
+        self.high_water = max(self.high_water, self.used_blocks)
         return True
 
     def ensure(self, slot: int, pos: int) -> bool:
@@ -135,6 +144,7 @@ class PageTableManager:
         self.table[slot, len(held):need] = blocks
         held.extend(blocks)
         self.version += 1
+        self.high_water = max(self.high_water, self.used_blocks)
         return True
 
     def release(self, slot: int) -> None:

@@ -40,6 +40,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs.base import RunConfig
 from repro.launch import steps as steps_mod
+from repro.obs import NULL_LOG, EventLog, default_registry
 from repro.serving import paged_cache as pc
 
 __all__ = ["Request", "Scheduler"]
@@ -47,7 +48,15 @@ __all__ = ["Request", "Scheduler"]
 
 @dataclasses.dataclass
 class Request:
-    """One generation request and its lifecycle record."""
+    """One generation request and its lifecycle record.
+
+    Latency anchors are all measured from ``arrival`` on the shared trace
+    clock: ``t_started`` is the FIRST prefill start (set once — a
+    preempted request keeps it through its re-prefill, so queue wait is
+    the initial admission delay), ``t_first`` the first generated token
+    (also set once: time-to-first-token for a preempted-then-resumed
+    request is measured from the original arrival, not the re-prefill),
+    ``t_done`` retirement."""
 
     rid: int
     prompt: np.ndarray  # (prompt_len,) int32
@@ -55,6 +64,7 @@ class Request:
     eos_id: Optional[int]
     arrival: float = 0.0  # virtual seconds from run start (trace replay)
     tokens: List[int] = dataclasses.field(default_factory=list)
+    t_started: Optional[float] = None  # first prefill start (queue wait)
     t_first: Optional[float] = None  # first-token latency anchor
     t_done: Optional[float] = None
     preemptions: int = 0
@@ -100,13 +110,18 @@ class Scheduler:
                     lower to oversubscribe and exercise preemption).
     on_token      : optional streaming callback ``(request, token)`` fired
                     per generated token.
+    obs           : optional ``repro.obs.EventLog`` receiving per-request
+                    lifecycle events (queued → prefill → first-token →
+                    retired/preempted), per-step slot/pool occupancy, and
+                    compile-cache events (DESIGN.md §12).
     """
 
     def __init__(self, run: RunConfig, params: Any, mesh, *,
                  num_slots: int = 4, max_len: int = 256,
                  prefill_len: Optional[int] = None, block_size: int = 16,
                  num_blocks: Optional[int] = None,
-                 on_token: Optional[Callable[[Request, int], None]] = None):
+                 on_token: Optional[Callable[[Request, int], None]] = None,
+                 obs: Optional[EventLog] = None):
         cfg = run.model
         if cfg.family not in ("dense", "moe"):
             raise ValueError(
@@ -155,6 +170,11 @@ class Scheduler:
         self._positions = np.zeros((num_slots,), np.int32)
         self._tokens = np.zeros((num_slots, 1), np.int32)
         self._pt_version = -1  # last page-table version shipped to device
+        self.obs = obs if obs is not None else NULL_LOG
+        # compile-cache watermarks: a change after a prefill/decode call
+        # becomes a compile_cache event (the single-compile contract,
+        # observable instead of test-only)
+        self._compiles_seen = {"prefill": 0, "decode": 0}
 
     # -- metrics -----------------------------------------------------------
 
@@ -188,6 +208,10 @@ class Scheduler:
         req = Request(self._rid, prompt, max_new, eos_id, arrival=arrival)
         self._rid += 1
         self.queue.append(req)
+        if self.obs.active:
+            self.obs.emit("request_queued", rid=req.rid,
+                          prompt_len=int(prompt.size), max_new=max_new,
+                          arrival=arrival)
         return req.rid
 
     def has_work(self) -> bool:
@@ -205,6 +229,9 @@ class Scheduler:
         req.tokens.append(tok)
         if req.t_first is None:
             req.t_first = self._now()
+            if self.obs.active:
+                self.obs.emit("request_first_token", rid=req.rid,
+                              ttft_s=req.t_first - req.arrival)
         if self.on_token is not None:
             self.on_token(req, tok)
         if (req.eos_id is not None and tok == req.eos_id) \
@@ -214,8 +241,14 @@ class Scheduler:
             slot.token = tok
 
     def _retire(self, slot: _Slot) -> None:
-        slot.req.t_done = self._now()
-        self.finished[slot.req.rid] = slot.req
+        req = slot.req
+        req.t_done = self._now()
+        self.finished[req.rid] = req
+        if self.obs.active:
+            self.obs.emit("request_retired", rid=req.rid,
+                          latency_s=req.t_done - req.arrival,
+                          tokens=len(req.tokens),
+                          preemptions=req.preemptions)
         self._release(slot)
 
     def _release(self, slot: _Slot) -> None:
@@ -238,6 +271,9 @@ class Scheduler:
         """Push a running request back to the queue front; it resumes by
         re-prefilling prompt+generated (exact under greedy decode)."""
         slot.req.preemptions += 1
+        if self.obs.active:
+            self.obs.emit("request_preempted", rid=slot.req.rid,
+                          generated=len(slot.req.tokens))
         self.queue.appendleft(slot.req)
         self._release(slot)
 
@@ -268,14 +304,34 @@ class Scheduler:
             self.queue.popleft()
             self._start(idx, slot, req, fed)
 
+    def _note_compiles(self, fn: str) -> None:
+        """Emit a compile_cache event when an executable cache grew — in
+        steady state the single-compile contract (DESIGN.md §8) means this
+        fires exactly once per fn for the scheduler lifetime."""
+        n = (self.decode_compiles if fn == "decode"
+             else self.prefill_compiles)
+        if n != self._compiles_seen[fn]:
+            self._compiles_seen[fn] = n
+            self.obs.emit("compile_cache", fn=fn, compiles=n)
+
     def _start(self, idx: int, slot: _Slot, req: Request,
                fed: np.ndarray) -> None:
+        now = self._now()
+        resume = bool(req.tokens)
+        if req.t_started is None:
+            req.t_started = now
+        if self.obs.active:
+            self.obs.emit("request_prefill", rid=req.rid, slot=idx,
+                          fed_len=int(fed.size), resume=resume,
+                          queue_wait_s=max(req.t_started - req.arrival, 0.0))
         padded = np.zeros((1, self.prefill_len), np.int32)
         padded[0, :fed.size] = fed
         batch = {"tokens": jnp.asarray(padded),
                  "labels": jnp.zeros_like(jnp.asarray(padded))}
         last, pcache = self._prefill(
             self.params, batch, jnp.asarray([fed.size - 1], jnp.int32))
+        if self.obs.active:
+            self._note_compiles("prefill")
         if self.pages is not None:
             self.cache = self._insert(
                 self.cache, pcache, jnp.asarray(self.pages.table[idx]))
@@ -342,6 +398,20 @@ class Scheduler:
                 continue
             s.pos += 1
             self._emit(s, int(nxt[i, 0]))
+        if self.obs.active:
+            self._note_compiles("decode")
+            ev = {"active_slots": sum(1 for s in self.slots if s.active),
+                  "queued": len(self.queue)}
+            if self.pages is not None:
+                ev.update(pool_used=self.pages.used_blocks,
+                          pool_free=self.pages.allocator.free_blocks,
+                          pool_high_water=self.pages.high_water)
+            self.obs.emit("serve_step", **ev)
+            reg = default_registry()
+            reg.gauge("serve_active_slots").set(ev["active_slots"])
+            if self.pages is not None:
+                reg.gauge("serve_pool_used_blocks").set(ev["pool_used"])
+                reg.gauge("serve_pool_high_water").set(ev["pool_high_water"])
 
     def run(self, poll: float = 0.0005) -> Dict[int, np.ndarray]:
         """Drive until queue and slots drain; returns rid -> tokens."""
@@ -357,21 +427,50 @@ class Scheduler:
 
     # -- trace stats -------------------------------------------------------
 
+    #: latency_stats() keys — schema-stable: with no finished requests the
+    #: dict carries explicit zeros under exactly these keys, never ``{}``,
+    #: so downstream row builders don't need per-key existence checks.
+    STAT_KEYS = ("requests", "generated_tokens", "tok_per_s",
+                 "p50_latency_s", "p95_latency_s", "p99_latency_s",
+                 "p50_first_token_s", "p95_first_token_s",
+                 "p50_queue_wait_s", "p95_queue_wait_s",
+                 "preemptions", "preempted_requests")
+
     def reset_stats(self) -> None:
-        """Drop finished-request records and re-anchor the trace clock —
-        call between a compile-warmup run and a measured trace replay."""
+        """Drop finished-request records and re-anchor the trace clock.
+
+        Contract: callable only while idle (no queued or running work —
+        raises otherwise, because in-flight requests hold timestamps on
+        the old clock); the next ``_now()`` re-anchors virtual time at
+        zero, so arrival offsets of a subsequently submitted trace are
+        relative to that moment.  Compile caches, the page pool, and the
+        metrics-registry series survive — only per-request records reset.
+        Call it between a compile-warmup run and a measured trace replay.
+        """
         if self.has_work():
             raise RuntimeError("reset_stats with work in flight")
         self.finished.clear()
         self._t0 = None
 
     def latency_stats(self) -> Dict[str, float]:
-        """Completion-latency percentiles + throughput over finished reqs."""
+        """Latency/throughput summary over finished requests.
+
+        Every anchor is relative to the request's ORIGINAL ``arrival``:
+        queue wait is first prefill start − arrival, first-token latency
+        is first generated token − arrival (unchanged by preemption —
+        ``Request.t_first`` is set exactly once), completion latency is
+        retirement − arrival.  ``preemptions`` counts preemption events,
+        ``preempted_requests`` counts requests preempted at least once.
+        Returns all ``STAT_KEYS`` with explicit zeros when nothing
+        finished.
+        """
         reqs = list(self.finished.values())
         if not reqs:
-            return {}
+            return {k: 0.0 for k in self.STAT_KEYS}
         lat = np.asarray([r.t_done - r.arrival for r in reqs])
         first = np.asarray([r.t_first - r.arrival for r in reqs])
+        wait = np.asarray([(r.t_started or r.arrival) - r.arrival
+                           for r in reqs])
         total_tok = sum(len(r.tokens) for r in reqs)
         span = max(max(r.t_done for r in reqs), 1e-9)
         return {
@@ -380,6 +479,12 @@ class Scheduler:
             "tok_per_s": total_tok / span,
             "p50_latency_s": float(np.percentile(lat, 50)),
             "p95_latency_s": float(np.percentile(lat, 95)),
+            "p99_latency_s": float(np.percentile(lat, 99)),
             "p50_first_token_s": float(np.percentile(first, 50)),
+            "p95_first_token_s": float(np.percentile(first, 95)),
+            "p50_queue_wait_s": float(np.percentile(wait, 50)),
+            "p95_queue_wait_s": float(np.percentile(wait, 95)),
             "preemptions": float(sum(r.preemptions for r in reqs)),
+            "preempted_requests": float(
+                sum(1 for r in reqs if r.preemptions)),
         }
