@@ -4,8 +4,11 @@ Replays ``--requests`` requests with exponential inter-arrival times at
 ``--rate`` req/s (random prompt lengths) through the scheduler-backed
 ``ServeEngine`` and prints throughput + latency percentiles.  ``--export``
 serves the rank-quantized Algorithm-1 artifact (serving/export.py);
-families the scheduler doesn't cover (enc-dec, VLM, SSM/hybrid) fall back
-to the legacy fixed-batch path automatically.
+``--spec-k`` decodes self-speculatively, drafting k tokens per step with
+a rank-truncated derivation of the served params (``--spec-rank`` /
+``--spec-fraction``; serving/speculative.py) — token-exact under greedy
+decode.  Families the scheduler doesn't cover (enc-dec, VLM, SSM/hybrid)
+fall back to the legacy fixed-batch path automatically.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
       --slots 4 --requests 16 --rate 8 --max-new 16
@@ -59,6 +62,15 @@ def main(argv=None):
     ap.add_argument("--export", choices=("none", "analytic", "measured"),
                     default="none",
                     help="serve the rank-quantized Algorithm-1 artifact")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft tokens per step "
+                         "(0 = plain decode; serving/speculative.py)")
+    ap.add_argument("--spec-rank", type=int, default=0,
+                    help="explicit draft rank (clamped per layer); 0 = "
+                         "Algorithm-1 sweep scaled by --spec-fraction")
+    ap.add_argument("--spec-fraction", type=float, default=0.5,
+                    help="draft rank as a fraction of the sweep's "
+                         "pre-cliff rank (used when --spec-rank is 0)")
     ap.add_argument("--eos-id", type=int, default=-1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--obs", action="store_true",
@@ -107,7 +119,11 @@ def main(argv=None):
                              prefill_len=args.prompt_len,
                              block_size=args.block_size,
                              num_blocks=args.num_blocks or None,
-                             obs=obs)
+                             obs=obs, speculative_k=args.spec_k,
+                             spec_rank=args.spec_rank or None,
+                             spec_fraction=args.spec_fraction)
+        if args.spec_k and engine.scheduler and engine.draft_report:
+            print(engine.draft_report.summary())
         trace = poisson_trace(args.requests, args.rate, args.prompt_len,
                               cfg.vocab_size, args.seed)
         for r in trace:
@@ -136,6 +152,14 @@ def main(argv=None):
               f"first-token p50 {stats['p50_first_token_s'] * 1e3:.0f}ms  "
               f"queue-wait p50 {stats['p50_queue_wait_s'] * 1e3:.0f}ms  "
               f"preemptions {int(stats['preemptions'])}")
+        if args.spec_k:
+            print(f"speculative: k={args.spec_k}, "
+                  f"{int(stats['spec_steps'])} steps, "
+                  f"{int(stats['drafted_tokens'])} drafted / "
+                  f"{int(stats['accepted_tokens'])} accepted "
+                  f"(acceptance {stats['acceptance_rate']:.2f}; "
+                  f"{engine.scheduler.draft_compiles} draft + "
+                  f"{engine.scheduler.verify_compiles} verify compile)")
         print("sample:", outs[0][:16].tolist())
         return outs
 

@@ -594,6 +594,60 @@ def build_serve_step(run: RunConfig, mesh):
     return serve_step
 
 
+def build_draft_chain(run: RunConfig, mesh, k: int):
+    """k sequential draft-decode steps fused into ONE program (DESIGN.md
+    §13): token j's argmax feeds step j+1 inside the trace, so the whole
+    draft phase costs one dispatch instead of k — at serving batch sizes
+    the per-dispatch overhead is a large share of a decode step, and it is
+    exactly the cost the draft model's smaller matmuls cannot shrink.
+
+    Returns ``(new_cache, chunk)`` where chunk (B, k+1) is the pending
+    token followed by the k drafted tokens — the verify step's input,
+    ready as-is.  ``k`` is static: one compile per engine lifetime.
+    """
+    cfg = run.model
+
+    def draft_chain(params, cache, token, pos):
+        act = ACT_RULES_SP if run.dist.sequence_parallel else ACT_RULES
+        with axis_rules(mesh, act=act, params=_param_rules(run)):
+            kw = dict(use_pallas=kernel_policy(run))
+            toks = [token]
+            for j in range(k):
+                logits, cache, _ = lm.lm_apply(
+                    params, toks[-1], cfg, mode="decode", cache=cache,
+                    pos=pos + j, **kw)
+                toks.append(jnp.argmax(logits[:, -1:], axis=-1)
+                            .astype(token.dtype))
+            return cache, jnp.concatenate(toks, axis=1)
+
+    return draft_chain
+
+
+def build_verify_step(run: RunConfig, mesh):
+    """Chunked full-model verify for speculative decoding (DESIGN.md §13).
+
+    Like :func:`build_serve_step`, but ``tokens`` is a (B, k+1) chunk —
+    the pending token followed by k draft tokens — fed at per-row start
+    positions ``pos``.  Returns the greedy next token at EVERY chunk
+    position (the same ``jnp.argmax`` the serve step applies to its single
+    position, so accepted tokens are the ones plain decode would emit),
+    plus the updated cache with all k+1 positions written.  One compile
+    for the engine lifetime: the chunk width is fixed by ``speculative_k``.
+    """
+    cfg = run.model
+
+    def verify_step(params, cache, tokens, pos):
+        act = ACT_RULES_SP if run.dist.sequence_parallel else ACT_RULES
+        with axis_rules(mesh, act=act, params=_param_rules(run)):
+            logits, new_cache, _ = lm.lm_apply(
+                params, tokens, cfg, mode="decode", cache=cache, pos=pos,
+                use_pallas=kernel_policy(run))
+            next_tokens = jnp.argmax(logits, axis=-1).astype(tokens.dtype)
+            return new_cache, next_tokens
+
+    return verify_step
+
+
 # --------------------------------------------------------------------------
 # abstract input specs (dry-run)
 # --------------------------------------------------------------------------

@@ -30,6 +30,12 @@ def dense_attention(q, k, v, *, causal: bool, q_offset: int = 0,
     preferred_element_type — an explicit .astype(f32) on the operands
     materializes an fp32 copy of the whole KV cache per layer (§Perf C1:
     2 x 435 GB/step/device for qwen2-72b decode_32k, 82% of all traffic).
+
+    ``kv_len`` masks decode reads beyond the live length: (B,) gives one
+    length per row; (B, Sq) gives a length per row *per query position* —
+    the chunked speculative verify step (serving/speculative.py) feeds k+1
+    tokens at once and position j may only attend to kv_len[b, j] keys, so
+    in-chunk causality comes from the same mask that hides stale tail KV.
     """
     b, sq, h, d = q.shape
     kv = k.shape[2]
@@ -42,12 +48,21 @@ def dense_attention(q, k, v, *, causal: bool, q_offset: int = 0,
         tpos = jnp.arange(k.shape[1])
         logits = jnp.where(qpos[:, None] >= tpos[None, :], logits, -1e30)
     if kv_len is not None:  # decode: mask beyond current length
-        valid = jnp.arange(k.shape[1])[None, :] < kv_len.reshape(-1, 1)
-        logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
+        logits = _mask_kv_len(logits, k.shape[1], kv_len)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
     return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+
+
+def _mask_kv_len(logits, t: int, kv_len: jax.Array) -> jax.Array:
+    """Apply a per-row (B,) or per-row-per-query (B, Sq) length mask to
+    (b, kv, g, q, t) decode logits."""
+    if kv_len.ndim == 2:  # (B, Sq): chunked decode, per-query lengths
+        valid = jnp.arange(t)[None, None, :] < kv_len[:, :, None]  # (b, q, t)
+        return jnp.where(valid[:, None, None, :, :], logits, -1e30)
+    valid = jnp.arange(t)[None, :] < kv_len.reshape(-1, 1)
+    return jnp.where(valid[:, None, None, None, :], logits, -1e30)
 
 
 def int8_dense_attention(q, k_q, k_scale, v_q, v_scale, *,
@@ -75,8 +90,7 @@ def int8_dense_attention(q, k_q, k_scale, v_q, v_scale, *,
                         preferred_element_type=jnp.float32)
     logits = logits * ks.astype(jnp.float32)
     if kv_len is not None:
-        valid = jnp.arange(t)[None, :] < kv_len.reshape(-1, 1)
-        logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
+        logits = _mask_kv_len(logits, t, kv_len)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgqt,btkd->bqkgd", p * vs.astype(jnp.float32), v_q,
                      preferred_element_type=jnp.float32)
@@ -205,7 +219,8 @@ def _row_positions(pos, batch: int):
 
 
 def _update_rows(cache_leaf: jax.Array, new: jax.Array, rows) -> jax.Array:
-    """Write one decode step (B, 1, ...) into (B, S, ...) at per-row offsets."""
+    """Write one decode step (B, s, ...) into (B, Smax, ...) at per-row
+    offsets (s = 1 plain decode, k+1 for the speculative verify chunk)."""
     zeros = (0,) * (cache_leaf.ndim - 2)
     return jax.vmap(
         lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (p,) + zeros)
@@ -215,15 +230,17 @@ def _update_rows(cache_leaf: jax.Array, new: jax.Array, rows) -> jax.Array:
 def _paged_write(pool: jax.Array, new: jax.Array, phys: jax.Array) -> jax.Array:
     """Scatter one decode step into the block pool.
 
-    pool: (num_blocks, block_size, ...); new: (B, 1, ...); phys: (B,) flat
-    physical positions (block_id * block_size + offset).  Distinct slots own
+    pool: (num_blocks, block_size, ...); new: (B, S, ...); phys: (B, S) flat
+    physical positions (block_id * block_size + offset).  S is 1 for plain
+    decode and k+1 for the speculative verify chunk.  Distinct slots own
     distinct blocks, so indices never collide; retired slots point at the
     reserved sink block 0 (serving/paged_cache.py) and their writes land
     there harmlessly.
     """
     nb, bs = pool.shape[0], pool.shape[1]
     flat = pool.reshape((nb * bs,) + pool.shape[2:])
-    flat = flat.at[phys].set(new[:, 0].astype(pool.dtype))
+    flat = flat.at[phys.reshape(-1)].set(
+        new.astype(pool.dtype).reshape((-1,) + pool.shape[2:]))
     return flat.reshape(pool.shape)
 
 
@@ -250,14 +267,20 @@ def _gqa_paged_update(cache: Params, k_new, v_new, rows,
 
     cache: {"k","v"[, "k_scale","v_scale"], "page_table"} with pools shaped
     (num_blocks, block_size, KV, hd) and page_table (B, max_blocks).
-    Returns (new_cache, k_view, v_view) where the views are (B, Lmax, KV, *)
-    logical per-slot caches.  int8 pools: ``native_int8=True`` returns the
-    raw ``(values, scales)`` pairs for :func:`int8_dense_attention`;
-    otherwise the views are dequantized (legacy bf16 round trip).
+    ``k_new``/``v_new`` are (B, S, KV, hd) with S >= 1: row b writes at
+    logical positions rows[b] .. rows[b]+S-1 (the speculative verify chunk
+    writes k+1 positions in one step).  Returns (new_cache, k_view, v_view)
+    where the views are (B, Lmax, KV, *) logical per-slot caches.  int8
+    pools: ``native_int8=True`` returns the raw ``(values, scales)`` pairs
+    for :func:`int8_dense_attention`; otherwise the views are dequantized
+    (legacy bf16 round trip).
     """
     pt = cache["page_table"]
     bs = cache["k"].shape[1]
-    phys = pt[jnp.arange(pt.shape[0]), rows // bs] * bs + rows % bs
+    s = k_new.shape[1]
+    positions = rows[:, None] + jnp.arange(s, dtype=rows.dtype)  # (B, S)
+    phys = (pt[jnp.arange(pt.shape[0])[:, None], positions // bs] * bs
+            + positions % bs)  # (B, S)
     if "k_scale" in cache:
         from repro.models import kvcache as kvq
         kq, ks = kvq.quantize_kv(k_new)
@@ -361,7 +384,7 @@ def gqa_apply(
         v = shard(v, "batch", "kv_seq", "kv_heads", None)
         out = attention_core(q, k, v, cfg, causal=causal and not cross)
         new_cache = {"k": k, "v": v} if not cross else {"k": k, "v": v}
-    else:  # decode: s == 1, cache holds (B, Smax, KV, hd)
+    else:  # decode: s == 1 (plain) or k+1 (verify chunk); cache (B, Smax, KV, hd)
         assert cache is not None and pos is not None
         if cross:
             # cross-attn kv computed at prefill; just read the cache
@@ -374,9 +397,13 @@ def gqa_apply(
             new_cache = cache
         else:
             q, k_new, v_new = _project_qkv(p, x, None, cfg, rope, use_pallas=use_pallas)
-            pos_arr = jnp.asarray(pos)
-            length = (pos_arr + 1).astype(jnp.int32).reshape(-1)
             rows, start = _row_positions(pos, b)
+            base = rows if rows is not None else jnp.broadcast_to(start, (b,))
+            # (B, Sq) per-query lengths: query j attends to positions
+            # < pos+j+1, which is both the live-length mask and the
+            # in-chunk causal mask of the speculative verify step.
+            length = (base[:, None].astype(jnp.int32) + 1
+                      + jnp.arange(s, dtype=jnp.int32)[None, :])
             from repro.kernels import ops as kops
             native_int8 = kops.as_policy(use_pallas).int8_decode == "native"
             if "page_table" in cache:  # paged block pool (DESIGN.md §8)
@@ -503,7 +530,6 @@ def mla_apply(
     else:
         # Absorbed decode: score in latent space, never materialize per-head K/V.
         assert cache is not None and pos is not None
-        pos_arr = jnp.asarray(pos)
         rows, start = _row_positions(pos, b)
         if rows is not None:  # slot-indexed continuous decode (DESIGN.md §8)
             ckv_cache = _update_rows(cache["ckv"], ckv, rows)
@@ -527,9 +553,14 @@ def mla_apply(
             + jnp.einsum("bshr,btr->bhst", q_rope, kr_cache,
                          preferred_element_type=jnp.float32)
         ) * scale
-        length = (pos_arr + 1).astype(jnp.int32).reshape(-1)
-        valid = jnp.arange(logits.shape[-1])[None, :] < length[:, None]
-        logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+        base = rows if rows is not None else jnp.broadcast_to(start, (b,))
+        # (B, S, T) mask: per-row live length, advancing per chunk position
+        # (in-chunk causality for the speculative verify step, S > 1).
+        length = (base[:, None].astype(jnp.int32) + 1
+                  + jnp.arange(s, dtype=jnp.int32)[None, :])
+        valid = (jnp.arange(logits.shape[-1])[None, None, :]
+                 < length[:, :, None])
+        logits = jnp.where(valid[:, None, :, :], logits, -1e30)
         probs = jax.nn.softmax(logits, axis=-1)
         ctx_lat = jnp.einsum("bhst,btl->bshl", probs.astype(x.dtype), ckv_cache,
                              preferred_element_type=jnp.float32).astype(x.dtype)

@@ -331,12 +331,15 @@ def _make_rope(cfg: ModelConfig, s: int, mode: str, pos):
         pos_arr = jnp.asarray(pos).reshape(-1)
         if pos_arr.size > 1:
             # Slot-indexed decode: each batch row sits at its own position,
-            # so the tables are (B, 1, hd/2) — apply_rope broadcasts per row.
-            cos, sin = rope_table(1, hd, cfg.rope_theta,
-                                  positions=pos_arr[:, None])
+            # so the tables are (B, s, hd/2) — apply_rope broadcasts per
+            # row.  s > 1 is the speculative verify chunk: row b's chunk
+            # positions are pos[b] .. pos[b]+s-1.
+            cos, sin = rope_table(s, hd, cfg.rope_theta,
+                                  positions=pos_arr[:, None]
+                                  + jnp.arange(s)[None, :])
         else:
-            cos, sin = rope_table(1, hd, cfg.rope_theta,
-                                  positions=pos_arr[:1] + jnp.arange(1))
+            cos, sin = rope_table(s, hd, cfg.rope_theta,
+                                  positions=pos_arr[:1] + jnp.arange(s))
     return (cos, sin)
 
 

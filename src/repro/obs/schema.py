@@ -45,6 +45,7 @@ EVENT_FIELDS: Dict[str, tuple] = {
     "request_retired": ("rid", "latency_s", "tokens", "preemptions"),
     "request_preempted": ("rid", "generated"),
     "serve_step": ("active_slots", "queued"),
+    "spec_step": ("drafted", "accepted", "emitted", "acceptance_rate"),
     "compile_cache": ("fn", "compiles"),
     # benchmarks (benchmarks/common.py)
     "bench_row": ("bench", "row"),

@@ -95,11 +95,25 @@ class ServeEngine:
     block_size: int = 16
     num_blocks: Optional[int] = None
     obs: Any = None  # optional repro.obs.EventLog, handed to the scheduler
+    #: draft tokens per scheduler step (0 = plain decode).  With k > 0 the
+    #: scheduler runs self-speculative decoding: the draft model is derived
+    #: from ``params`` by rank truncation (serving/speculative.py) — no
+    #: second checkpoint — and every emitted token is verified against the
+    #: full model (token-exact greedy decode).
+    speculative_k: int = 0
+    #: explicit draft rank (clamped per-layer); None = Algorithm-1 sweep
+    #: scaled by ``spec_fraction``.
+    spec_rank: Optional[int] = None
+    spec_fraction: float = 0.5
+    #: override the derived draft entirely (e.g. a rank-adapted export
+    #: served as draft); bypasses draft_rank_map/make_draft_params.
+    draft_params: Any = None
 
     def __post_init__(self):
         self._prefill = jax.jit(steps_mod.build_prefill_step(self.run, self.mesh))
         self._step = jax.jit(steps_mod.build_serve_step(self.run, self.mesh))
         self._scheduler = None
+        self.draft_report = None  # set when a draft is derived lazily
 
     # -- continuous-batching path -----------------------------------------
 
@@ -108,11 +122,20 @@ class ServeEngine:
         """The engine's (lazily built, lifetime-shared) scheduler."""
         if self._scheduler is None:
             from repro.serving.scheduler import Scheduler
+            draft = self.draft_params
+            if self.speculative_k and draft is None:
+                from repro.serving import speculative
+                rank_map = speculative.draft_rank_map(
+                    self.params, rank=self.spec_rank,
+                    fraction=self.spec_fraction)
+                draft, self.draft_report = speculative.make_draft_params(
+                    self.params, rank_map)
             self._scheduler = Scheduler(
                 self.run, self.params, self.mesh,
                 num_slots=self.num_slots, max_len=self.max_len,
                 prefill_len=self.prefill_len, block_size=self.block_size,
-                num_blocks=self.num_blocks, obs=self.obs)
+                num_blocks=self.num_blocks, obs=self.obs,
+                speculative_k=self.speculative_k, draft_params=draft)
         return self._scheduler
 
     def _scheduler_usable(self, extras, prompt_len=0, max_new=0) -> bool:

@@ -147,6 +147,27 @@ class PageTableManager:
         self.high_water = max(self.high_water, self.used_blocks)
         return True
 
+    def trim(self, slot: int, length: int) -> int:
+        """Shrink a slot's pages to cover only ``length`` positions.
+
+        The speculative-decode rollback primitive (DESIGN.md §13): a
+        rejected draft leaves KV written past the committed length, which
+        the masks already hide — but the tail *blocks* the lookahead
+        allocated stay held.  Under pool pressure the scheduler trims them
+        back to the committed length so waiting requests can admit.
+        Returns the number of blocks freed (0 when nothing to trim).
+        """
+        keep = blocks_for(length, self.block_size)
+        held = self._slot_blocks[slot]
+        if keep >= len(held):
+            return 0
+        tail = held[keep:]
+        del held[keep:]
+        self.allocator.free(tail)
+        self.table[slot, keep:] = 0
+        self.version += 1
+        return len(tail)
+
     def release(self, slot: int) -> None:
         """Retire a slot: free its blocks, point its table at the sink."""
         self.allocator.free(self._slot_blocks[slot])

@@ -24,6 +24,19 @@ Cache layouts (serving/paged_cache.py):
   by re-prefilling prompt+generated (greedy decode makes this exact).
 * ``slots`` — MLA latent caches (already rank-compressed): each slot owns
   one row of a contiguous cache; no allocator, no preemption.
+
+Speculative decoding (``speculative_k > 0``, DESIGN.md §13): each step
+drafts k tokens with ``draft_params`` (a rank-truncated derivation of the
+full params — serving/speculative.py), then verifies them in ONE chunked
+full-model forward and emits the longest matching prefix plus the full
+model's bonus token — 1..k+1 tokens per step, token-exact vs. plain greedy
+decode.  Draft and verify share the slot's cache: draft KV is overwritten
+by verify KV in the same step, and the rejected tail is dead by masking
+until the next step's writes reclaim it (KV rollback costs nothing).  The
+compile-once contract extends to the two extra programs: one draft-decode
+and one verify executable for the engine lifetime (``draft_compiles`` /
+``verify_compiles``).  The serving window is padded by k internally so
+draft lookahead never writes past the cache.
 """
 
 from __future__ import annotations
@@ -42,6 +55,7 @@ from repro.configs.base import RunConfig
 from repro.launch import steps as steps_mod
 from repro.obs import NULL_LOG, EventLog, default_registry
 from repro.serving import paged_cache as pc
+from repro.serving import speculative
 
 __all__ = ["Request", "Scheduler"]
 
@@ -114,6 +128,12 @@ class Scheduler:
                     lifecycle events (queued → prefill → first-token →
                     retired/preempted), per-step slot/pool occupancy, and
                     compile-cache events (DESIGN.md §12).
+    speculative_k : draft tokens per step (0 = plain decode).  With k > 0
+                    each step runs k draft-model decodes plus one chunked
+                    full-model verify and emits 1..k+1 tokens per slot.
+    draft_params  : the draft model's params (serving/speculative.py);
+                    defaults to ``params`` (acceptance 1.0, no speedup —
+                    useful for exactness tests).
     """
 
     def __init__(self, run: RunConfig, params: Any, mesh, *,
@@ -121,7 +141,8 @@ class Scheduler:
                  prefill_len: Optional[int] = None, block_size: int = 16,
                  num_blocks: Optional[int] = None,
                  on_token: Optional[Callable[[Request, int], None]] = None,
-                 obs: Optional[EventLog] = None):
+                 obs: Optional[EventLog] = None,
+                 speculative_k: int = 0, draft_params: Any = None):
         cfg = run.model
         if cfg.family not in ("dense", "moe"):
             raise ValueError(
@@ -135,11 +156,18 @@ class Scheduler:
         self.max_len = max_len
         self.prefill_len = min(prefill_len or max_len, max_len)
         self.on_token = on_token
+        self.spec_k = max(int(speculative_k), 0)
+        self.draft_params = (draft_params if draft_params is not None
+                             else params) if self.spec_k else None
+        # draft lookahead writes up to pos + spec_k; pad the physical
+        # window so the overshoot never leaves the cache (requests still
+        # obey the user-facing prompt + max_new <= max_len contract)
+        window = max_len + self.spec_k
 
         self.layout = "paged" if pc.supports_paged(cfg) else "slots"
         if self.layout == "paged":
             self.block_size = block_size
-            max_blocks = pc.blocks_for(max_len, block_size)
+            max_blocks = pc.blocks_for(window, block_size)
             if num_blocks is None:
                 num_blocks = 1 + num_slots * max_blocks
             self.pages = pc.PageTableManager(num_slots, max_blocks,
@@ -153,13 +181,24 @@ class Scheduler:
                                    donate_argnums=(0,))
         else:
             self.pages = None
-            self.cache = pc.init_slot_cache(cfg, num_slots, max_len)
+            self.cache = pc.init_slot_cache(cfg, num_slots, window)
             self._insert = jax.jit(pc.insert_prefill_rows,
                                    donate_argnums=(0,))
 
         self._prefill = jax.jit(steps_mod.build_slot_prefill_step(run, mesh))
         self._decode = jax.jit(steps_mod.build_serve_step(run, mesh),
                                donate_argnums=(1,))
+        if self.spec_k:
+            # two extra once-compiled programs: the k-step fused draft
+            # chain (draft params, one dispatch for all k tokens) and the
+            # (B, k+1) chunked verify
+            self._draft = jax.jit(
+                steps_mod.build_draft_chain(run, mesh, self.spec_k),
+                donate_argnums=(1,))
+            self._verify = jax.jit(steps_mod.build_verify_step(run, mesh),
+                                   donate_argnums=(1,))
+        else:
+            self._draft = self._verify = None
 
         self.queue: Deque[Request] = deque()
         self.slots = [_Slot() for _ in range(num_slots)]
@@ -174,7 +213,14 @@ class Scheduler:
         # compile-cache watermarks: a change after a prefill/decode call
         # becomes a compile_cache event (the single-compile contract,
         # observable instead of test-only)
-        self._compiles_seen = {"prefill": 0, "decode": 0}
+        self._compiles_seen = {"prefill": 0, "decode": 0,
+                               "draft": 0, "verify": 0}
+        #: speculative-decoding counters (drafted/accepted are TOKEN
+        #: counts over active slots; acceptance compares draft tokens to
+        #: the verify chunk's greedy choices, independent of how many
+        #: tokens a mid-chunk retirement actually emitted)
+        self.spec_stats = {"spec_steps": 0, "drafted": 0, "accepted": 0,
+                           "rejected": 0, "emitted": 0}
 
     # -- metrics -----------------------------------------------------------
 
@@ -186,6 +232,21 @@ class Scheduler:
     @property
     def prefill_compiles(self) -> int:
         return self._prefill._cache_size()
+
+    @property
+    def draft_compiles(self) -> int:
+        """Compiled draft-decode executables — exactly 1 when speculating."""
+        return self._draft._cache_size() if self._draft is not None else 0
+
+    @property
+    def verify_compiles(self) -> int:
+        """Compiled chunked-verify executables — exactly 1 when speculating."""
+        return self._verify._cache_size() if self._verify is not None else 0
+
+    def acceptance_rate(self) -> float:
+        """Cumulative draft acceptance since the last ``reset_stats``."""
+        st = self.spec_stats
+        return st["accepted"] / st["drafted"] if st["drafted"] else 0.0
 
     def cache_bytes(self) -> int:
         return pc.paged_pool_bytes(self.cache) if self.layout == "paged" \
@@ -287,16 +348,17 @@ class Scheduler:
             fed = req.fed_tokens()
             # +1 covers the first decode write, so a fresh admission always
             # makes at least one token of progress before it can be
-            # preempted again (no admit/preempt livelock on a dry pool).
+            # preempted again (no admit/preempt livelock on a dry pool);
+            # +spec_k covers the draft lookahead of that first step.
             if self.pages is not None \
-                    and not self.pages.admit(idx, fed.size + 1):
+                    and not self.pages.admit(idx, fed.size + 1 + self.spec_k):
                 if not any(s.active for s in self.slots):
                     # blocks are held by active slots only, so with none
                     # active the pool is as free as it will ever be — the
                     # head request can never be served
                     raise RuntimeError(
                         f"request {req.rid} needs "
-                        f"{pc.blocks_for(fed.size + 1, self.block_size)} "
+                        f"{pc.blocks_for(fed.size + 1 + self.spec_k, self.block_size)} "
                         f"blocks but the pool has "
                         f"{self.pages.allocator.free_blocks} free at idle "
                         f"— raise num_blocks")
@@ -308,8 +370,10 @@ class Scheduler:
         """Emit a compile_cache event when an executable cache grew — in
         steady state the single-compile contract (DESIGN.md §8) means this
         fires exactly once per fn for the scheduler lifetime."""
-        n = (self.decode_compiles if fn == "decode"
-             else self.prefill_compiles)
+        n = {"decode": self.decode_compiles,
+             "prefill": self.prefill_compiles,
+             "draft": self.draft_compiles,
+             "verify": self.verify_compiles}[fn]
         if n != self._compiles_seen[fn]:
             self._compiles_seen[fn] = n
             self.obs.emit("compile_cache", fn=fn, compiles=n)
@@ -354,7 +418,8 @@ class Scheduler:
         if self.pages is None:
             return
         for idx, slot in enumerate(self.slots):
-            while slot.active and not self.pages.ensure(idx, slot.pos):
+            while slot.active and \
+                    not self.pages.ensure(idx, slot.pos + self.spec_k):
                 victims = [s for s in self.slots
                            if s.active and self._preemptable(s)]
                 if not victims:
@@ -366,6 +431,74 @@ class Scheduler:
                 self._preempt(victim)
                 if victim is slot:
                     break
+
+    def _spec_decode(self, active) -> None:
+        """One speculative step: k draft decodes, one chunked verify, then
+        emit the longest matching prefix plus the full model's bonus token.
+
+        Draft KV lands in the shared cache at pos..pos+k-1 and is
+        immediately overwritten by the verify pass's full-model KV at the
+        same positions; whatever tail the acceptance rule rejects stays
+        masked by ``kv_len`` until the NEXT step's writes (which start at
+        or before the stale range) reclaim it — rollback is free.
+        Emission reuses ``_emit`` one token at a time, so eos / max_new
+        retirement mid-chunk behaves exactly like plain decode reaching
+        the same token."""
+        k = self.spec_k
+        # two dispatches per step regardless of k: the fused draft chain
+        # (all k tokens inside one program) then the chunked verify — the
+        # only host syncs are the two reads after verify
+        self.cache, chunk_dev = self._draft(
+            self.draft_params, self.cache, jnp.asarray(self._tokens),
+            jnp.asarray(self._positions))
+        self.cache, verify = self._verify(
+            self.params, self.cache, chunk_dev,
+            jnp.asarray(self._positions))
+        chunk = np.asarray(chunk_dev)
+        verify = np.asarray(verify)
+        verify = np.asarray(verify)
+        ns = speculative.accept_lengths(chunk, verify)
+        drafted = accepted = emitted = 0
+        for i, s in active:
+            if not s.active:
+                continue
+            acc = int(ns[i])
+            drafted += k
+            accepted += acc
+            for j in range(acc):
+                s.pos += 1
+                self._emit(s, int(chunk[i, j + 1]))
+                emitted += 1
+                if not s.active:  # retired mid-chunk (eos / max_new)
+                    break
+            if s.active:
+                s.pos += 1
+                self._emit(s, int(verify[i, acc]))
+                emitted += 1
+        st = self.spec_stats
+        st["spec_steps"] += 1
+        st["drafted"] += drafted
+        st["accepted"] += accepted
+        st["rejected"] += drafted - accepted
+        st["emitted"] += emitted
+        # lookahead pressure valve: rejected-draft blocks past pos are
+        # idle reservations — when the pool is dry AND someone is waiting,
+        # trim every active slot back to its committed length so the queue
+        # head can admit instead of forcing a preemption
+        if self.pages is not None and self.queue \
+                and self.pages.allocator.free_blocks == 0:
+            for i, s in enumerate(self.slots):
+                if s.active:
+                    self.pages.trim(i, s.pos + 1)
+        if self.obs.active:
+            rate = accepted / drafted if drafted else 0.0
+            self.obs.emit("spec_step", drafted=drafted, accepted=accepted,
+                          emitted=emitted, acceptance_rate=rate)
+            reg = default_registry()
+            reg.counter("spec_drafted_tokens").inc(drafted)
+            reg.counter("spec_accepted_tokens").inc(accepted)
+            reg.counter("spec_rejected_tokens").inc(drafted - accepted)
+            reg.gauge("spec_acceptance_rate").set(self.acceptance_rate())
 
     # -- the step ----------------------------------------------------------
 
@@ -389,17 +522,24 @@ class Scheduler:
                 self.cache, self.pages.table,
                 sharding=NamedSharding(self.mesh, PartitionSpec()))
             self._pt_version = self.pages.version
-        _, self.cache, nxt = self._decode(
-            self.params, self.cache, jnp.asarray(self._tokens),
-            jnp.asarray(self._positions), None)
-        nxt = np.asarray(nxt)
-        for i, s in active:
-            if not s.active:  # preempted between bookkeeping passes
-                continue
-            s.pos += 1
-            self._emit(s, int(nxt[i, 0]))
+        if self.spec_k:
+            self._spec_decode(active)
+        else:
+            _, self.cache, nxt = self._decode(
+                self.params, self.cache, jnp.asarray(self._tokens),
+                jnp.asarray(self._positions), None)
+            nxt = np.asarray(nxt)
+            for i, s in active:
+                if not s.active:  # preempted between bookkeeping passes
+                    continue
+                s.pos += 1
+                self._emit(s, int(nxt[i, 0]))
         if self.obs.active:
-            self._note_compiles("decode")
+            if self.spec_k:
+                self._note_compiles("draft")
+                self._note_compiles("verify")
+            else:
+                self._note_compiles("decode")
             ev = {"active_slots": sum(1 for s in self.slots if s.active),
                   "queued": len(self.queue)}
             if self.pages is not None:
@@ -434,7 +574,9 @@ class Scheduler:
                  "p50_latency_s", "p95_latency_s", "p99_latency_s",
                  "p50_first_token_s", "p95_first_token_s",
                  "p50_queue_wait_s", "p95_queue_wait_s",
-                 "preemptions", "preempted_requests")
+                 "preemptions", "preempted_requests",
+                 "spec_steps", "drafted_tokens", "accepted_tokens",
+                 "acceptance_rate")
 
     def reset_stats(self) -> None:
         """Drop finished-request records and re-anchor the trace clock.
@@ -450,6 +592,8 @@ class Scheduler:
         if self.has_work():
             raise RuntimeError("reset_stats with work in flight")
         self.finished.clear()
+        for key in self.spec_stats:
+            self.spec_stats[key] = 0
         self._t0 = None
 
     def latency_stats(self) -> Dict[str, float]:
@@ -487,4 +631,8 @@ class Scheduler:
             "preemptions": float(sum(r.preemptions for r in reqs)),
             "preempted_requests": float(
                 sum(1 for r in reqs if r.preemptions)),
+            "spec_steps": float(self.spec_stats["spec_steps"]),
+            "drafted_tokens": float(self.spec_stats["drafted"]),
+            "accepted_tokens": float(self.spec_stats["accepted"]),
+            "acceptance_rate": self.acceptance_rate(),
         }

@@ -1,0 +1,152 @@
+"""Self-speculative decoding from rank-truncated drafts (DESIGN.md §13).
+
+The paper's export path (Algorithm 1 in serving/export.py) already produces
+a cheaper model whose factors derive from the full model's by Eckart–Young
+truncation — a *free draft model*: no second checkpoint, no distillation.
+This module builds that draft and hosts the host-side acceptance rule; the
+scheduler (serving/scheduler.py) wires both into its step loop:
+
+* **draft**: k single-token decode steps with the truncated params, writing
+  draft KV into the SAME paged cache the full model uses (same block
+  layout — the rank truncation lives in the weights, not the cache shape);
+* **verify**: ONE chunked full-model forward over the pending token plus
+  the k draft tokens, overwriting the draft KV with full-model KV as it
+  goes (models/attention.py's multi-position decode writes);
+* **accept**: the longest prefix of draft tokens matching the full model's
+  greedy choices, plus the full model's own next token as a bonus — so
+  every emitted token is exactly what plain full-model greedy decode would
+  have produced, and rejected-tail KV is dead by construction (masked by
+  ``kv_len`` now, overwritten by the next step's writes later).
+
+Draft ranks come from the existing Algorithm-1 sweep
+(``core.rank_opt.optimize_rank``): the sweep's pre-cliff rank bounds where
+truncation stops paying for itself; ``fraction`` scales below it for a more
+aggressive draft (LORD, arXiv 2309.14021, shows one-shot truncation keeps
+enough fidelity for that to be viable).  Groups already at or below their
+target rank pass through BY IDENTITY — they share buffers with the full
+model, so a mild draft costs a fraction of a second weight copy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import rank_opt, svd
+from repro.core.decompose import iter_factor_groups, map_factor_groups
+
+__all__ = ["DraftReport", "draft_rank_map", "make_draft_params",
+           "accept_lengths"]
+
+
+@dataclasses.dataclass
+class DraftReport:
+    """Per-group outcome of the draft derivation."""
+
+    #: path -> (full rank, draft rank); equal means the group is shared.
+    layers: Dict[str, Tuple[int, int]] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def truncated(self) -> int:
+        return sum(1 for r, d in self.layers.values() if d < r)
+
+    @property
+    def shared(self) -> int:
+        return sum(1 for r, d in self.layers.values() if d >= r)
+
+    def summary(self) -> str:
+        return (f"draft: {len(self.layers)} factor groups — "
+                f"{self.truncated} truncated, {self.shared} shared "
+                f"with the full model")
+
+
+def draft_rank_map(params: Any, *, rank: Optional[int] = None,
+                   fraction: float = 0.5,
+                   backend: str = "analytic-tpu",
+                   hw: rank_opt.HardwareModel = rank_opt.TPU_V5E,
+                   probe_tokens: int = 8,
+                   quantize_mode: str = "floor") -> Dict[str, int]:
+    """Target draft ranks for every SVD factor group of ``params``.
+
+    ``rank`` (explicit, e.g. ``--spec-rank 64``) clamps every group to
+    ``min(rank, live_rank)``.  Without it, each distinct (C, S, r) geometry
+    runs the Algorithm-1 sweep once (``optimize_rank``) and the draft takes
+    ``fraction`` of the sweep's pre-cliff rank, snapped to the MXU tile —
+    the same selection machinery the export path uses, pushed past the
+    fidelity-neutral point on purpose (the verify step restores exactness).
+    """
+    out: Dict[str, int] = {}
+    cache: Dict[Tuple[int, int, int], int] = {}
+    for path, group in iter_factor_groups(params):
+        u = group["u"]
+        c, r_live = int(u.shape[-2]), int(u.shape[-1])
+        s = int(group["v"].shape[-1])
+        if rank is not None:
+            out[path] = max(1, min(int(rank), r_live))
+            continue
+        key = (c, s, r_live)
+        if key not in cache:
+            alpha = svd.svd_compression_ratio(c, s, r_live)
+            dec = rank_opt.optimize_rank(c, s, alpha=alpha, m=probe_tokens,
+                                         backend=backend, hw=hw)
+            target = max(1, int(dec.rank * fraction))
+            target = rank_opt.quantize_rank(target, tile=hw.mxu_tile,
+                                            mode=quantize_mode)
+            cache[key] = max(1, min(target, r_live))
+        out[path] = cache[key]
+    return out
+
+
+def make_draft_params(params: Any, rank_map: Dict[str, int]
+                      ) -> Tuple[Any, DraftReport]:
+    """Derive the draft param tree by truncating factor groups to
+    ``rank_map``'s per-path targets (``core.svd.truncate_factors`` — the
+    QR-reduced Eckart–Young optimum, correct even for fine-tuned factors
+    that are no longer in SVD form).
+
+    Everything that is not a pure ``{u, v[, bias]}`` group — embeddings,
+    norms, guard-merged dense kernels, int8-quantized export artifacts —
+    passes through untouched and is SHARED with the full model, as are
+    groups whose live rank is already at or below their target.  The
+    returned tree drops into the scheduler as ``draft_params``; it is
+    architecturally identical to the full model (same cache shapes), just
+    cheaper per matmul.
+    """
+    report = DraftReport()
+
+    def rewrite(path: str, group: Dict[str, Any]) -> Dict[str, Any]:
+        u, v = group["u"], group["v"]
+        r_live = int(u.shape[-1])
+        target = rank_map.get(path, r_live)
+        report.layers[path] = (r_live, min(target, r_live))
+        if target >= r_live:
+            return group  # shared: same buffers as the full model
+        u2, v2 = svd.truncate_factors(u, v, target)
+        out = dict(group)
+        out["u"], out["v"] = u2, v2
+        return out
+
+    return map_factor_groups(params, rewrite), report
+
+
+def accept_lengths(chunk: np.ndarray, verify: np.ndarray) -> np.ndarray:
+    """Per-row accepted-prefix lengths, the speculative acceptance rule.
+
+    ``chunk`` (B, k+1): pending token t0 followed by draft tokens t1..tk.
+    ``verify`` (B, k+1): the full model's greedy next token after consuming
+    chunk[:, :j+1] — i.e. verify[:, j] is what plain decode would emit
+    right after t_j.  Row b accepts n = the longest prefix with
+    t_{j+1} == verify[b, j]; the emitted tokens are t1..tn plus the bonus
+    verify[b, n], which is exactly the plain-decode continuation whether
+    n == k (all drafts right) or the first mismatch replaced the draft.
+    """
+    chunk = np.asarray(chunk)
+    verify = np.asarray(verify)
+    match = chunk[:, 1:] == verify[:, :-1]  # (B, k)
+    if match.shape[1] == 0:
+        return np.zeros((chunk.shape[0],), np.int64)
+    return np.where(match.all(axis=1), match.shape[1],
+                    np.argmin(match, axis=1))

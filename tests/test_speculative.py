@@ -1,0 +1,320 @@
+"""Self-speculative decoding (DESIGN.md §13): token-exactness matrix over
+{bf16, int8 KV} x {paged, MLA contiguous} x k in {1, 2, 4}, mid-draft
+eos/max-new retirement, acceptance sanity, preemption-resume with
+in-flight drafts discarded, the single-compile contract extended to the
+draft chain + verify step, rank-truncated and rank-adapted drafts served
+end-to-end, seeded allocator fuzzing, and trace-seed determinism."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import DistConfig, LRDConfig, RunConfig, ShapeConfig
+from repro.launch import steps
+from repro.launch.mesh import make_host_mesh
+from repro.serving import ServeEngine, make_draft_params, draft_rank_map
+from repro.serving.scheduler import Scheduler
+
+
+def _make(arch="smollm-360m", kv_dtype=None, seed=0, lrd=False):
+    cfg = get_smoke_config(arch)
+    if kv_dtype:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_dtype)
+    run = RunConfig(model=cfg, shape=ShapeConfig("s", 32, 2, "decode"),
+                    lrd=LRDConfig(enabled=lrd, rank_quantize=False,
+                                  min_dim=16),
+                    dist=DistConfig(fsdp=False, remat="none"))
+    params, _ = steps.init_params(run, jax.random.PRNGKey(seed))
+    return run, params, make_host_mesh(1, 1)
+
+
+def _prompts(n, vocab, lo=4, hi=12, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, int(rng.integers(lo, hi)), dtype=np.int32)
+            for _ in range(n)]
+
+
+def _serve(run, params, mesh, prompts, max_new, *, spec_k=0,
+           draft_params=None, eos_ids=None, **kw):
+    kw.setdefault("prefill_len", 16)
+    sched = Scheduler(run, params, mesh, num_slots=2, max_len=32,
+                      speculative_k=spec_k, draft_params=draft_params, **kw)
+    rids = [sched.submit(p, max_new=max_new,
+                         eos_id=None if eos_ids is None else eos_ids[i])
+            for i, p in enumerate(prompts)]
+    out = sched.run()
+    return sched, [out[r] for r in rids]
+
+
+# --------------------------------------------------------------------------
+# Exactness matrix + compile-once contract
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,kv_dtype", [
+    ("smollm-360m", None),           # paged, bf16
+    ("smollm-360m", "int8"),         # paged, int8 KV + scale leaves
+    ("deepseek-v3-671b", None),      # MLA -> contiguous slot layout
+    ("deepseek-v3-671b", "int8"),    # MLA contiguous, int8 KV
+])
+def test_spec_decode_exactness_matrix(arch, kv_dtype):
+    """Speculative decode is a scheduling change, not a numerics change:
+    for every cache layout/dtype and every k, greedy tokens are identical
+    to the plain scheduler.  max_new=7 is coprime with each chunk length
+    (k+1), so every cell also retires mid-chunk at the max_new boundary."""
+    run, params, mesh = _make(arch, kv_dtype)
+    prompts = _prompts(3, run.model.vocab_size, seed=13)
+    ref_sched, ref = _serve(run, params, mesh, prompts, 7)
+    for k in (1, 2, 4):
+        # draft == target: every draft token must be accepted
+        sched, out = _serve(run, params, mesh, prompts, 7, spec_k=k,
+                            draft_params=params)
+        for o, r in zip(out, ref):
+            assert o.tolist() == r.tolist(), (arch, kv_dtype, k)
+        assert sched.acceptance_rate() == 1.0
+        assert sched.spec_stats["rejected"] == 0
+        # compile-once extends to the spec pair: ONE fused draft chain,
+        # ONE chunked verify, and the plain decode step never compiles
+        assert sched.draft_compiles == 1
+        assert sched.verify_compiles == 1
+        assert sched.decode_compiles == 0
+        assert sched.prefill_compiles == 1
+    assert ref_sched.spec_stats["spec_steps"] == 0  # plain path untouched
+
+
+def test_spec_exact_with_truncated_draft():
+    """A heavily rank-truncated draft mis-predicts freely — verification
+    still makes the output token-exact; only the acceptance rate moves."""
+    run, params, mesh = _make(lrd=True, seed=2)
+    prompts = _prompts(3, run.model.vocab_size, seed=17)
+    _, ref = _serve(run, params, mesh, prompts, 8)
+    draft, report = make_draft_params(params, draft_rank_map(params, rank=2))
+    assert report.truncated  # the draft really is a different model
+    sched, out = _serve(run, params, mesh, prompts, 8, spec_k=3,
+                        draft_params=draft)
+    for o, r in zip(out, ref):
+        assert o.tolist() == r.tolist()
+    st = sched.spec_stats
+    assert st["drafted"] > 0 and 0.0 <= sched.acceptance_rate() <= 1.0
+    assert st["accepted"] + st["rejected"] == st["drafted"]
+
+
+def test_spec_eos_mid_draft():
+    """A request whose eos lands inside an accepted chunk must retire at
+    that token exactly — later tokens from the same chunk are discarded."""
+    run, params, mesh = _make(seed=1)
+    prompts = _prompts(3, run.model.vocab_size, seed=19)
+    _, ref = _serve(run, params, mesh, prompts, 8)
+    # each request's 4th token as its own eos: with k=4 (chunk 5) and full
+    # acceptance, position 3 is strictly inside the first accepted chunk
+    eos_ids = [int(r[3]) for r in ref]
+    _, ref_eos = _serve(run, params, mesh, prompts, 8, eos_ids=eos_ids)
+    sched, out = _serve(run, params, mesh, prompts, 8, spec_k=4,
+                        draft_params=params, eos_ids=eos_ids)
+    for o, r in zip(out, ref_eos):
+        assert o.tolist() == r.tolist()
+    assert all(len(o) < 8 for o in out)  # eos really cut generation short
+
+
+def test_spec_preemption_resumes_exactly():
+    """Oversubscribed pool under speculative decode: preempted requests
+    resume by re-prefill, in-flight draft lookahead is discarded (pages
+    trimmed), and tokens still match the plain scheduler."""
+    run, params, mesh = _make()
+    prompts = _prompts(3, run.model.vocab_size, lo=8, hi=14, seed=7)
+    _, ref = _serve(run, params, mesh, prompts, 10, prefill_len=24,
+                    block_size=4, num_blocks=10)
+    sched, out = _serve(run, params, mesh, prompts, 10, spec_k=2,
+                        draft_params=params, prefill_len=24, block_size=4,
+                        num_blocks=10)
+    assert sum(r.preemptions for r in sched.finished.values()) > 0
+    for o, r in zip(out, ref):
+        assert o.tolist() == r.tolist()
+    assert sched.draft_compiles == 1 and sched.verify_compiles == 1
+
+
+def test_engine_derives_draft_and_reports():
+    """ServeEngine with speculative_k derives the draft lazily from the
+    served params (no second checkpoint) and matches plain generate."""
+    run, params, mesh = _make(lrd=True, seed=3)
+    plain = ServeEngine(run, params, mesh, max_len=32, num_slots=2,
+                        prefill_len=16)
+    spec = ServeEngine(run, params, mesh, max_len=32, num_slots=2,
+                       prefill_len=16, speculative_k=2, spec_fraction=0.5)
+    prompts = np.stack([p[:6] for p in
+                        _prompts(3, run.model.vocab_size, lo=6, hi=7)])
+    out = spec.generate(prompts, max_new=6)
+    np.testing.assert_array_equal(out, plain.generate(prompts, max_new=6))
+    assert spec.draft_report is not None and spec.draft_report.truncated
+    assert "draft" in spec.draft_report.summary()
+
+
+def test_rank_adapted_export_served_as_draft():
+    """Cross-feature: a rank-adapted checkpoint (NON-UNIFORM per-layer
+    ranks, core/rank_adapt.py) drops in as the draft model unchanged —
+    the scheduler only requires matching pytree structure, and verify
+    keeps the output token-exact."""
+    from repro.core import rank_adapt
+
+    run, params, mesh = _make(lrd=True, seed=6)
+    ranks = rank_adapt.live_rank_map(params)
+    rank_map = {p: max(2, r * (1 + i % 3) // 4)
+                for i, (p, r) in enumerate(sorted(ranks.items()))
+                if i % 2 == 0}
+    adapted = rank_adapt.truncate_params(params, rank_map)
+    new_ranks = rank_adapt.live_rank_map(adapted)
+    assert len(set(new_ranks.values())) > 2  # genuinely non-uniform
+    prompts = _prompts(3, run.model.vocab_size, seed=23)
+    _, ref = _serve(run, params, mesh, prompts, 8)
+    sched, out = _serve(run, params, mesh, prompts, 8, spec_k=2,
+                        draft_params=adapted)
+    for o, r in zip(out, ref):
+        assert o.tolist() == r.tolist()
+    assert sched.spec_stats["drafted"] > 0
+
+
+def test_draft_rank_map_and_sharing():
+    """Draft derivation: explicit rank clamps per layer; groups whose
+    target rank >= live rank are shared by identity (no copy)."""
+    run, params, mesh = _make(lrd=True, seed=4)
+    from repro.core.rank_adapt import live_rank_map
+    live = live_rank_map(params)
+    rmap = draft_rank_map(params, rank=4)
+    assert set(rmap) == set(live)
+    assert all(r == min(4, live[p]) for p, r in rmap.items())
+    draft, report = make_draft_params(params, {p: 10 ** 6 for p in live})
+    assert not report.truncated and report.shared  # all shared, none cut
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(draft)):
+        assert a is b
+
+
+def test_spec_step_events_validate():
+    """Satellite (obs): spec_step events carry the registered field set and
+    the whole serve trace validates against the JSONL schema."""
+    import json
+    from repro.obs import EventLog, validate_file
+
+    run, params, mesh = _make()
+    import tempfile, pathlib
+    with tempfile.TemporaryDirectory() as d:
+        path = pathlib.Path(d) / "events.jsonl"
+        obs = EventLog(path)
+        sched, _ = _serve(run, params, mesh,
+                          _prompts(2, run.model.vocab_size), 6,
+                          spec_k=2, draft_params=params, obs=obs)
+        obs.close()
+        assert validate_file(path) > 0
+        evs = [json.loads(l) for l in path.read_text().splitlines()]
+        spec = [e for e in evs if e["type"] == "spec_step"]
+        assert len(spec) == sched.spec_stats["spec_steps"] > 0
+        for e in spec:
+            assert {"drafted", "accepted", "emitted",
+                    "acceptance_rate"} <= set(e)
+
+
+def test_latency_stats_carry_spec_counters():
+    run, params, mesh = _make()
+    sched, _ = _serve(run, params, mesh,
+                      _prompts(2, run.model.vocab_size), 6,
+                      spec_k=2, draft_params=params)
+    stats = sched.latency_stats()
+    assert stats["spec_steps"] == sched.spec_stats["spec_steps"] > 0
+    assert stats["acceptance_rate"] == 1.0
+    sched.reset_stats()
+    assert sched.spec_stats["spec_steps"] == 0
+    assert sched.latency_stats()["drafted_tokens"] == 0.0
+
+
+# --------------------------------------------------------------------------
+# Allocator fuzz: free-list invariants under random op sequences
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_page_table_manager_fuzz_invariants(seed):
+    """Seeded random alloc/ensure/trim/release sequences on the page-table
+    manager: block 0 (the sink) is never handed out, no block is ever held
+    by two slots, used+free conserves the pool, and each slot's table rows
+    mirror its held blocks."""
+    from repro.serving.paged_cache import PageTableManager, blocks_for
+
+    rng = np.random.default_rng(seed)
+    num_slots, max_blocks, num_blocks, bs = 4, 8, 18, 4
+    mgr = PageTableManager(num_slots, max_blocks, num_blocks, bs)
+    lens = [0] * num_slots  # model: covered positions per live slot
+    live = [False] * num_slots
+
+    def check():
+        held = [mgr._slot_blocks[s] for s in range(num_slots)]
+        flat = [b for blocks in held for b in blocks]
+        assert 0 not in flat                      # sink never handed out
+        assert len(flat) == len(set(flat))        # no double-allocation
+        assert all(1 <= b < num_blocks for b in flat)
+        assert mgr.used_blocks == len(flat)       # conservation
+        assert mgr.allocator.free_blocks == num_blocks - 1 - len(flat)
+        for s in range(num_slots):
+            n = len(held[s])
+            assert mgr.allocated(s) == n
+            assert mgr.table[s, :n].tolist() == held[s]
+            assert (mgr.table[s, n:] == 0).all()  # tail points at the sink
+            if live[s]:
+                assert n == blocks_for(lens[s], bs)
+
+    for _ in range(400):
+        s = int(rng.integers(num_slots))
+        op = rng.choice(["admit", "ensure", "trim", "release"])
+        if op == "admit" and not live[s]:
+            length = int(rng.integers(1, max_blocks * bs + 1))
+            if mgr.admit(s, length):
+                live[s], lens[s] = True, length
+        elif op == "ensure" and live[s]:
+            pos = int(rng.integers(0, max_blocks * bs))
+            if mgr.ensure(s, pos):
+                lens[s] = max(lens[s], pos + 1)
+        elif op == "trim" and live[s]:
+            length = int(rng.integers(1, lens[s] + 1))
+            before = mgr.allocated(s)
+            freed = mgr.trim(s, length)
+            assert freed == before - blocks_for(length, bs)
+            lens[s] = length
+        elif op == "release" and live[s]:
+            mgr.release(s)
+            live[s], lens[s] = False, 0
+        check()
+    assert mgr.high_water <= num_blocks - 1
+
+
+def test_trim_frees_only_uncovered_blocks():
+    from repro.serving.paged_cache import PageTableManager
+
+    mgr = PageTableManager(2, 8, 20, 4)
+    assert mgr.admit(0, 30)  # 8 blocks
+    assert mgr.trim(0, 30) == 0        # nothing past the covered length
+    assert mgr.trim(0, 17) == 3        # 30->17 positions: 8->5 blocks
+    assert mgr.allocated(0) == 5
+    assert (mgr.table[0, 5:] == 0).all()
+    assert mgr.trim(0, 1) == 4
+    assert mgr.used_blocks == 1
+
+
+# --------------------------------------------------------------------------
+# Trace determinism
+# --------------------------------------------------------------------------
+
+def test_poisson_trace_seed_determinism():
+    """Satellite: --seed reproduces the serving trace bit-for-bit; a
+    different seed changes it."""
+    from repro.launch.serve import poisson_trace
+
+    a = poisson_trace(8, 4.0, 32, 1024, seed=5)
+    b = poisson_trace(8, 4.0, 32, 1024, seed=5)
+    c = poisson_trace(8, 4.0, 32, 1024, seed=6)
+    assert [r["arrival"] for r in a] == [r["arrival"] for r in b]
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra["prompt"], rb["prompt"])
+    assert [r["arrival"] for r in a] != [r["arrival"] for r in c]
+    assert any(len(ra["prompt"]) != len(rc["prompt"])
+               or (ra["prompt"] != rc["prompt"]).any()
+               for ra, rc in zip(a, c))
