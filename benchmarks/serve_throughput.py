@@ -44,6 +44,12 @@ rows decay the artifact's factor spectra first.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
 
 import jax
 import numpy as np
@@ -51,9 +57,8 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.configs.base import DistConfig, LRDConfig, RunConfig, ShapeConfig
 from repro.launch import steps
-from repro.launch.mesh import make_host_mesh
-from repro.launch.serve import poisson_trace
-from repro.serving import ServeEngine, export_for_serving
+from repro.launch.serve import poisson_trace, shared_prefix_trace
+from repro.serving import ServeConfig, ServeEngine, export_for_serving
 
 ARCH = "smollm-360m@serve-bench"
 
@@ -151,9 +156,9 @@ def _run_variant(variant: str, *, slots, requests, rate, prompt_len, max_new,
         export_summary = report.summary()
         if variant == "export-int8":
             parity = _int8_logits_parity(params, cfg, prompt_len, seed)
-    mesh = make_host_mesh(1, 1)
-    engine = ServeEngine(run, params, mesh, max_len=max_len, num_slots=slots,
-                         prefill_len=prompt_len, block_size=block_size)
+    engine = ServeEngine(run, params, config=ServeConfig(
+        max_len=max_len, num_slots=slots, prefill_len=prompt_len,
+        block_size=block_size))
 
     # warmup: compile prefill/insert/decode outside the measured trace
     engine.serve([{"prompt": np.arange(1, prompt_len // 2, dtype=np.int32),
@@ -261,13 +266,12 @@ def _spec_rows(*, slots, prompt_len, block_size, seed, iters=5):
     params, report = export_for_serving(params, backend="measured",
                                         probe_tokens=256, stride=8)
     params = _decay_spectrum(params)
-    mesh = make_host_mesh(1, 1)
     rows = []
     for spec_k in (0,) + tuple(SPEC_KS):
-        engine = ServeEngine(run, params, mesh, max_len=max_len,
-                             num_slots=slots, prefill_len=prompt_len,
-                             block_size=block_size, speculative_k=spec_k,
-                             spec_fraction=SPEC_FRACTION)
+        engine = ServeEngine(run, params, config=ServeConfig(
+            max_len=max_len, num_slots=slots, prefill_len=prompt_len,
+            block_size=block_size, speculative_k=spec_k,
+            spec_fraction=SPEC_FRACTION))
         engine.serve([{"prompt": np.arange(1, prompt_len // 2,
                                            dtype=np.int32), "max_new": 2}])
         steady, spec_stats = _steady_decode_tok_s(
@@ -303,6 +307,167 @@ def _spec_rows(*, slots, prompt_len, block_size, seed, iters=5):
     return rows
 
 
+# -- radix prefix cache rows (serving/radix_cache.py) -----------------------
+
+PREFIX_LEN = 32  # shared system prompt: 4 full blocks at block_size=8
+PREFIX_SUFFIX = 8
+
+
+def _prefix_rows(*, slots, requests, rate, block_size, seed, iters=3):
+    """Shared-prefix Poisson trace served twice through the same LRD
+    artifact — radix cache off, then on.  Gates: exact greedy token parity
+    AND a strict prefill-token reduction (the cache-on row prefills only
+    the uncached suffixes)."""
+    cfg = _bench_cfg()
+    prompt_len = PREFIX_LEN + PREFIX_SUFFIX
+    max_new = 8
+    max_len = prompt_len + max_new
+    run = RunConfig(model=cfg,
+                    shape=ShapeConfig("serve", max_len, slots, "decode"),
+                    lrd=LRDConfig(enabled=True, min_dim=16,
+                                  rank_quantize=False),
+                    dist=DistConfig(fsdp=False, remat="none"))
+    params, _ = steps.init_params(run, jax.random.PRNGKey(seed))
+    trace = shared_prefix_trace(requests, rate, PREFIX_LEN, PREFIX_SUFFIX,
+                                cfg.vocab_size, seed)
+    for r in trace:
+        r["max_new"] = max_new
+    rows, tokens = [], {}
+    for cached in (False, True):
+        engine = ServeEngine(run, params, config=ServeConfig(
+            max_len=max_len, num_slots=slots, prefill_len=prompt_len,
+            block_size=block_size, prefix_cache=cached))
+        # warmup compiles prefill/insert/decode (and, cache-on, the extend
+        # program) outside the measured replays
+        engine.serve([{"prompt": trace[0]["prompt"], "max_new": 2},
+                      {"prompt": trace[0]["prompt"], "max_new": 2}])
+        engine.scheduler.reset_stats()
+        runs = []
+        for _ in range(iters):
+            tokens[cached] = [np.asarray(r) for r in engine.serve(trace)]
+            runs.append(engine.scheduler.latency_stats())
+        runs.sort(key=lambda s: s["tok_per_s"])
+        stats = runs[len(runs) // 2]
+        sched = engine.scheduler
+        rows.append({
+            "arch": ARCH, "variant": f"lrd-prefix-{'on' if cached else 'off'}",
+            "slots": slots, "requests": requests,
+            "prompt_len": prompt_len, "max_new": max_new,
+            "prefix_len": PREFIX_LEN, "layout": sched.layout,
+            "tok_per_s": stats["tok_per_s"],
+            "p50_latency_ms": stats["p50_latency_s"] * 1e3,
+            "p50_first_token_ms": stats["p50_first_token_s"] * 1e3,
+            # median replay's prefill volume (serve() resets stats per trace)
+            "prefill_tokens": int(stats["prefill_tokens"]),
+            "prefix_hits": int(stats["prefix_hits"]),
+            "prefix_hit_tokens": int(stats["prefix_hit_tokens"]),
+            "decode_compiles": sched.decode_compiles,
+            "insert_compiles": sched.insert_compiles,
+            "extend_compiles": sched.extend_compiles,
+        })
+    for a, b in zip(tokens[False], tokens[True]):
+        assert np.array_equal(a, b), \
+            "prefix cache broke greedy exactness: %r vs %r" % (a, b)
+    assert rows[1]["prefill_tokens"] < rows[0]["prefill_tokens"], (
+        "radix cache did not reduce prefill volume: "
+        f"{rows[1]['prefill_tokens']} vs {rows[0]['prefill_tokens']}")
+    return rows
+
+
+# -- TP-sharded rows (forced-8-device subprocess) ---------------------------
+
+TP_MESHES = (1, 2)
+TP_DRIFT_TOL = 1e-5
+
+
+def _sharded_child(json_out: str):
+    """Runs inside the forced-8-device subprocess: serve the same
+    shared-prefix trace through a 1-device and a model=2 TP mesh, gate on
+    compile-once, exact token parity, and decode logits drift."""
+    import jax.numpy as jnp
+
+    cfg = get_smoke_config("smollm-360m")
+    slots, block_size, max_new = 2, 8, 8
+    prompt_len = PREFIX_LEN + PREFIX_SUFFIX
+    max_len = prompt_len + max_new
+    run = RunConfig(model=cfg,
+                    shape=ShapeConfig("serve", max_len, slots, "decode"),
+                    lrd=LRDConfig(enabled=True, min_dim=16,
+                                  rank_quantize=False),
+                    dist=DistConfig(fsdp=False, remat="none"))
+    params, _ = steps.init_params(run, jax.random.PRNGKey(0))
+    trace = shared_prefix_trace(8, 200.0, PREFIX_LEN, PREFIX_SUFFIX,
+                                cfg.vocab_size, 0)
+    for r in trace:
+        r["max_new"] = max_new
+    rows, tokens, logits = [], {}, {}
+    for dm in TP_MESHES:
+        engine = ServeEngine(run, params, config=ServeConfig(
+            max_len=max_len, num_slots=slots, prefill_len=prompt_len,
+            block_size=block_size, mesh_model=dm, prefix_cache=True))
+        import time
+        t0 = time.perf_counter()
+        tokens[dm] = [np.asarray(r) for r in engine.serve(trace)]
+        dt = time.perf_counter() - t0
+        sched = engine.scheduler
+        stats = sched.latency_stats()
+        for fn, n in (("decode", sched.decode_compiles),
+                      ("prefill", sched.prefill_compiles),
+                      ("insert", sched.insert_compiles)):
+            assert n == 1, f"mesh model={dm}: {fn} compiled {n}x"
+        lg, _, _ = sched._decode(
+            sched.params, sched.cache,
+            jnp.asarray(np.ones((slots, 1), np.int32)),
+            jnp.asarray(np.zeros(slots, np.int32)), None)
+        logits[dm] = np.asarray(lg, np.float32)
+        rows.append({
+            "arch": cfg.name, "variant": f"tp-model{dm}",
+            "mesh_model": dm, "devices": engine.mesh.devices.size,
+            "slots": slots, "requests": len(trace),
+            "prompt_len": prompt_len, "max_new": max_new,
+            "prefix_cache": True, "layout": sched.layout,
+            "tok_per_s": stats["tok_per_s"],
+            "wall_s": dt,
+            "prefill_tokens": int(stats["prefill_tokens"]),
+            "prefix_hits": int(stats["prefix_hits"]),
+            "decode_compiles": sched.decode_compiles,
+            "insert_compiles": sched.insert_compiles,
+            "extend_compiles": sched.extend_compiles,
+        })
+    for a, b in zip(tokens[TP_MESHES[0]], tokens[TP_MESHES[-1]]):
+        assert np.array_equal(a, b), f"TP token parity broke: {a} vs {b}"
+    drift = float(np.max(np.abs(logits[TP_MESHES[0]]
+                                - logits[TP_MESHES[-1]])))
+    assert drift <= TP_DRIFT_TOL, \
+        f"TP decode logits drift {drift:.2e} > {TP_DRIFT_TOL:.0e}"
+    for row in rows:
+        row["tp_logits_drift_max_abs"] = drift
+        row["tp_logits_drift_tol"] = TP_DRIFT_TOL
+    Path(json_out).write_text(json.dumps(rows))
+
+
+def _sharded_rows():
+    """Re-exec under a forced-8-device host platform (jax pins the device
+    count at first init, so the parent can't widen it retroactively) and
+    read the TP rows back."""
+    root = Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env["PYTHONPATH"] = str(root / "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    with tempfile.TemporaryDirectory() as td:
+        out = Path(td) / "rows.json"
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.serve_throughput",
+             "--sharded-child", "--json-out", str(out)],
+            cwd=root, env=env, capture_output=True, text=True, timeout=1800)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"sharded serving child failed:\n{proc.stdout}\n{proc.stderr}")
+        return json.loads(out.read_text())
+
+
 def run(slots=2, requests=8, rate=200.0, prompt_len=16, max_new=8,
         block_size=8, seed=0):
     rows = [_run_variant(v, slots=slots, requests=requests, rate=rate,
@@ -311,6 +476,9 @@ def run(slots=2, requests=8, rate=200.0, prompt_len=16, max_new=8,
             for v in VARIANTS]
     rows += _spec_rows(slots=slots, prompt_len=prompt_len,
                        block_size=block_size, seed=seed)
+    rows += _prefix_rows(slots=slots, requests=requests, rate=rate,
+                         block_size=block_size, seed=seed)
+    rows += _sharded_rows()
     return rows
 
 
@@ -319,8 +487,8 @@ def main(**kw):
     print("# serve throughput: variant, steady tok/s (saturated), trace "
           "tok/s, p50/p95 latency ms, first-token p50 ms")
     for r in rows:
-        if "tok_per_s" not in r:
-            continue  # spec rows print their own section below
+        if r["variant"] not in VARIANTS:
+            continue  # spec/prefix/TP rows print their own sections below
         print(f"{r['variant']},{r['steady_tok_per_s']:.1f},"
               f"{r['tok_per_s']:.1f},"
               f"{r['p50_latency_ms']:.0f}/{r['p95_latency_ms']:.0f},"
@@ -357,8 +525,34 @@ def main(**kw):
         assert s >= export_steady, (
             f"{r['variant']} steady {s:.1f} tok/s regressed below the "
             f"export row's {export_steady:.1f}")
+    print("# radix prefix cache: variant, trace tok/s, prefill tokens, "
+          "hits (shared-prefix trace, exact-parity gated)")
+    for v in ("lrd-prefix-off", "lrd-prefix-on"):
+        r = by[v]
+        print(f"{r['variant']},{r['tok_per_s']:.1f},"
+              f"{r['prefill_tokens']},{r['prefix_hits']}"
+              f"  [{r['extend_compiles']} extend + "
+              f"{r['insert_compiles']} insert compile]")
+    saved = by["lrd-prefix-off"]["prefill_tokens"] \
+        - by["lrd-prefix-on"]["prefill_tokens"]
+    print(f"prefix cache saved {saved} prefill tokens "
+          f"({by['lrd-prefix-off']['prefill_tokens']} -> "
+          f"{by['lrd-prefix-on']['prefill_tokens']}) at exact parity")
+    print("# TP-sharded serving (forced-8-device subprocess): variant, "
+          "devices, trace tok/s, compile counts, logits drift")
+    for dm in TP_MESHES:
+        r = by[f"tp-model{dm}"]
+        print(f"{r['variant']},{r['devices']},{r['tok_per_s']:.1f}"
+              f"  [{r['decode_compiles']} decode + "
+              f"{r['insert_compiles']} insert + "
+              f"{r['extend_compiles']} extend compile; drift "
+              f"{r['tp_logits_drift_max_abs']:.2e} <= "
+              f"{r['tp_logits_drift_tol']:.0e}]")
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    if "--sharded-child" in sys.argv:
+        _sharded_child(sys.argv[sys.argv.index("--json-out") + 1])
+    else:
+        main()

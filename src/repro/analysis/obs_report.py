@@ -151,34 +151,54 @@ def render_train(rows: List[Dict]) -> str:
 # Serving summary
 # -------------------------------------------------------------------------
 
+def _request_fields(events: List[dict]) -> Dict[str, list]:
+    """Collect each ``RequestResult`` field's raw values from its source
+    event, as named by :data:`schema.REQUEST_FIELD_EVENTS` — the shared
+    vocabulary between the serving results, ``latency_stats`` and this
+    report (no per-report key re-derivation)."""
+    by_type: Dict[str, list] = {}
+    for e in events:
+        by_type.setdefault(e["type"], []).append(e)
+    return {field: [e[key] for e in by_type.get(etype, []) if key in e]
+            for field, (etype, key) in schema.REQUEST_FIELD_EVENTS.items()}
+
+
 def serve_summary(events: List[dict]) -> Dict:
     """Aggregate the per-request lifecycle + per-step occupancy events."""
     retired = [e for e in events if e["type"] == "request_retired"]
-    first = [e for e in events if e["type"] == "request_first_token"]
     prefills = [e for e in events if e["type"] == "request_prefill"]
     steps = [e for e in events if e["type"] == "serve_step"]
+    fields = _request_fields(events)
     out: Dict = {
         "queued": sum(1 for e in events if e["type"] == "request_queued"),
         "retired": len(retired),
         "preempt_events": sum(
             1 for e in events if e["type"] == "request_preempted"),
         "preempted_requests": sum(
-            1 for e in retired if e["preemptions"] > 0),
-        "generated_tokens": int(sum(e["tokens"] for e in retired)),
+            1 for p in fields["preemptions"] if p > 0),
+        "generated_tokens": int(sum(fields["token_count"])),
+        "drafted_tokens": int(sum(fields["drafted_tokens"])),
+        "accepted_tokens": int(sum(fields["accepted_tokens"])),
         "serve_steps": len(steps),
         "compiles": {e["fn"]: e["compiles"] for e in events
                      if e["type"] == "compile_cache"},
     }
-    if retired:
-        lat = np.asarray([e["latency_s"] for e in retired])
+    if fields["latency_s"]:
+        lat = np.asarray(fields["latency_s"])
         out["p50_latency_s"] = float(np.percentile(lat, 50))
         out["p99_latency_s"] = float(np.percentile(lat, 99))
-    if first:
-        out["p50_ttft_s"] = float(np.percentile(
-            [e["ttft_s"] for e in first], 50))
-    fresh_waits = [e["queue_wait_s"] for e in prefills if not e["resume"]]
-    if fresh_waits:
-        out["p50_queue_wait_s"] = float(np.percentile(fresh_waits, 50))
+    if fields["ttft_s"]:
+        out["p50_ttft_s"] = float(np.percentile(fields["ttft_s"], 50))
+    wait_key = schema.REQUEST_FIELD_EVENTS["queue_wait_s"][1]
+    hit_key = schema.REQUEST_FIELD_EVENTS["prefix_hit_len"][1]
+    fresh = [e for e in prefills if not e["resume"]]
+    if fresh:
+        out["p50_queue_wait_s"] = float(np.percentile(
+            [e[wait_key] for e in fresh], 50))
+        hits = [e[hit_key] for e in fresh if hit_key in e]
+        out["prefix_lookups"] = len(hits)
+        out["prefix_hits"] = sum(1 for h in hits if h > 0)
+        out["prefix_hit_tokens"] = int(sum(hits))
     if steps:
         out["max_active_slots"] = int(max(e["active_slots"] for e in steps))
         hwm = [e["pool_high_water"] for e in steps if "pool_high_water" in e]
@@ -207,6 +227,14 @@ def render_serve(s: Dict) -> str:
             f"  occupancy: max {s['max_active_slots']} active slot(s)"
             + (f", pool high-water {s['pool_high_water_blocks']} block(s)"
                if "pool_high_water_blocks" in s else ""))
+    if s.get("prefix_hits"):
+        lines.append(
+            f"  prefix cache: {s['prefix_hits']}/{s['prefix_lookups']} "
+            f"hit(s), {s['prefix_hit_tokens']} prompt token(s) reused")
+    if s.get("drafted_tokens"):
+        lines.append(
+            f"  speculative: {s['accepted_tokens']}/{s['drafted_tokens']} "
+            f"draft token(s) accepted")
     if s["compiles"]:
         compiled = ", ".join(f"{k}={v}" for k, v in s["compiles"].items())
         lines.append(f"  compile caches: {compiled}")

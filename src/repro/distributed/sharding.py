@@ -248,7 +248,17 @@ _PARAM_PATTERNS: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
 )
 
 
+# int8 export artifacts (serving/export.py quantize_factors="int8") store a
+# factor as sibling leaves ``<name>_q`` (int8 values, same shape) and
+# ``<name>_scale`` (f32, shape (..., 1, S) — one scale per output column).
+# Both resolve through the float leaf's pattern: the path is rewritten to the
+# base name and the scale's broadcast dims of size 1 fall through the
+# divisibility check to None on their own.
+_INT8_EXPORT_LEAF = re.compile(r"(/(?:u|v|kernel))_(?:q|scale)$")
+
+
 def _logical_axes_for(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    path = _INT8_EXPORT_LEAF.sub(r"\1", path)
     base: Optional[Tuple[Optional[str], ...]] = None
     for pattern, axes in _PARAM_PATTERNS:
         if re.search(pattern, path):
@@ -320,6 +330,47 @@ def place_at_paths(tree: Any, mesh: Mesh, rules: RuleTable,
         return jax.device_put(t, NamedSharding(mesh, s))
 
     return walk(tree, specs, "")
+
+
+def paged_pool_specs(cache: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree for a paged serving cache (DESIGN.md §14).
+
+    Pool leaves (L, num_blocks, block_size, KV, hd) — and their int8 scale
+    siblings (..., KV, 1) — shard the KV-head dim over ``model`` when it
+    divides; page tables and anything else stay replicated.  The serving
+    step builders clamp their cache *outputs* with exactly these specs so
+    the executable's output placement matches the init/upload placement and
+    the compile-once contract holds on a multi-device mesh.
+
+    Mesh axes of size 1 are pruned from the resolved specs: naming them is
+    semantically replication, but GSPMD normalizes jit *output* shardings
+    to ``P()`` on such axes, and the init-vs-echo spec mismatch would key
+    a second executable per step (breaking compile-once on exactly the
+    1-device meshes the contract is easiest to hold on).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def prune(spec: P) -> P:
+        parts = []
+        for p in spec:
+            names = () if p is None else ((p,) if isinstance(p, str)
+                                          else tuple(p))
+            names = tuple(n for n in names if sizes.get(n, 1) > 1)
+            parts.append(None if not names
+                         else names[0] if len(names) == 1 else names)
+        while parts and parts[-1] is None:  # P(None,...) != P() as a key
+            parts.pop()
+        return P(*parts)
+
+    def walk(tree, name):
+        if isinstance(tree, dict):
+            return {k: walk(v, k) for k, v in tree.items()}
+        if name in ("k", "v", "k_scale", "v_scale") and tree.ndim == 5:
+            axes = (None, None, None, "kv_heads", None)
+            return prune(_resolve_spec(tree.shape, axes, ACT_RULES, mesh))
+        return P()
+
+    return walk(cache, "")
 
 
 def named_shardings(params: Any, mesh: Optional[Mesh] = None,

@@ -2,13 +2,18 @@
 
 Replays ``--requests`` requests with exponential inter-arrival times at
 ``--rate`` req/s (random prompt lengths) through the scheduler-backed
-``ServeEngine`` and prints throughput + latency percentiles.  ``--export``
-serves the rank-quantized Algorithm-1 artifact (serving/export.py);
-``--spec-k`` decodes self-speculatively, drafting k tokens per step with
-a rank-truncated derivation of the served params (``--spec-rank`` /
-``--spec-fraction``; serving/speculative.py) — token-exact under greedy
-decode.  Families the scheduler doesn't cover (enc-dec, VLM, SSM/hybrid)
-fall back to the legacy fixed-batch path automatically.
+``ServeEngine`` and prints throughput + latency percentiles.  All engine
+knobs flow through one validated ``ServeConfig`` (serving/config.py):
+``--export`` serves the rank-quantized Algorithm-1 artifact
+(``--export-int8`` quantizes its factors); ``--spec-k`` decodes
+self-speculatively, drafting k tokens per step with a rank-truncated
+derivation of the served params (``--spec-rank`` / ``--spec-fraction``;
+serving/speculative.py) — token-exact under greedy decode;
+``--mesh-data/--mesh-model`` place params + paged pools on a TP mesh;
+``--prefix-cache`` shares prompt prefixes through the radix cache
+(serving/radix_cache.py).  Families the scheduler doesn't cover
+(enc-dec, VLM, SSM/hybrid) fall back to the legacy fixed-batch path
+automatically.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
       --slots 4 --requests 16 --rate 8 --max-new 16
@@ -27,9 +32,8 @@ from pathlib import Path
 from repro.configs import get_config, get_smoke_config
 from repro.configs.base import DistConfig, LRDConfig, RunConfig, ShapeConfig
 from repro.launch import steps as steps_mod
-from repro.launch.mesh import make_host_mesh
 from repro.obs import EventLog
-from repro.serving import ServeEngine
+from repro.serving import ServeConfig, ServeEngine
 
 
 def poisson_trace(n: int, rate: float, prompt_len: int, vocab: int,
@@ -41,6 +45,20 @@ def poisson_trace(n: int, rate: float, prompt_len: int, vocab: int,
     lens = rng.integers(max(prompt_len // 4, 1), prompt_len + 1, n)
     return [{"prompt": rng.integers(0, vocab, int(l), dtype=np.int32),
              "arrival": float(t)} for t, l in zip(arrivals, lens)]
+
+
+def shared_prefix_trace(n: int, rate: float, prefix_len: int, suffix_len: int,
+                        vocab: int, seed: int = 0):
+    """n requests sharing one ``prefix_len``-token system prompt, each with
+    a random 1..``suffix_len`` tail — the radix-prefix-cache workload
+    (every request after the first can reuse the prefix's full blocks)."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / max(rate, 1e-9), n))
+    prefix = rng.integers(0, vocab, prefix_len, dtype=np.int32)
+    return [{"prompt": np.concatenate(
+                 [prefix, rng.integers(0, vocab, int(s), dtype=np.int32)]),
+             "arrival": float(t)}
+            for t, s in zip(arrivals, rng.integers(1, suffix_len + 1, n))]
 
 
 def main(argv=None):
@@ -62,6 +80,16 @@ def main(argv=None):
     ap.add_argument("--export", choices=("none", "analytic", "measured"),
                     default="none",
                     help="serve the rank-quantized Algorithm-1 artifact")
+    ap.add_argument("--export-int8", action="store_true",
+                    help="int8-quantize the export artifact's factors "
+                         "(requires --export)")
+    ap.add_argument("--mesh-data", type=int, default=1,
+                    help="data axis of the serving mesh")
+    ap.add_argument("--mesh-model", type=int, default=1,
+                    help="model (tensor-parallel) axis of the serving mesh")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree prompt-prefix cache over the paged "
+                         "block pool (serving/radix_cache.py)")
     ap.add_argument("--spec-k", type=int, default=0,
                     help="speculative decoding: draft tokens per step "
                          "(0 = plain decode; serving/speculative.py)")
@@ -102,26 +130,18 @@ def main(argv=None):
                     lrd=LRDConfig(enabled=args.lrd, min_dim=16,
                                   rank_quantize=False),
                     dist=DistConfig(fsdp=False, remat="none"))
-    mesh = make_host_mesh(1, 1)
     params, plan = steps_mod.init_params(run)
     if plan.layers:
         print(plan.summary())
-    if args.export != "none":
-        from repro.serving.export import export_for_serving
-        backend = "measured" if args.export == "measured" else "analytic-tpu"
-        params, report = export_for_serving(params, backend=backend,
-                                            probe_tokens=args.slots)
-        print(report.summary())
 
     if cfg.family in ("dense", "moe"):
-        engine = ServeEngine(run, params, mesh, max_len=max_len,
-                             num_slots=args.slots,
-                             prefill_len=args.prompt_len,
-                             block_size=args.block_size,
-                             num_blocks=args.num_blocks or None,
-                             obs=obs, speculative_k=args.spec_k,
-                             spec_rank=args.spec_rank or None,
-                             spec_fraction=args.spec_fraction)
+        config = ServeConfig.from_args(args, max_len=max_len)
+        engine = ServeEngine(run, params, config=config, obs=obs)
+        if engine.export_report is not None:
+            print(engine.export_report.summary())
+        if config.mesh_model > 1 or config.mesh_data > 1:
+            print(f"mesh: data={config.mesh_data} model={config.mesh_model} "
+                  f"({engine.mesh.devices.size} devices)")
         if args.spec_k and engine.scheduler and engine.draft_report:
             print(engine.draft_report.summary())
         trace = poisson_trace(args.requests, args.rate, args.prompt_len,
@@ -160,6 +180,13 @@ def main(argv=None):
                   f"(acceptance {stats['acceptance_rate']:.2f}; "
                   f"{engine.scheduler.draft_compiles} draft + "
                   f"{engine.scheduler.verify_compiles} verify compile)")
+        if config.prefix_cache:
+            print(f"prefix cache: {int(stats['prefix_hits'])}/"
+                  f"{int(stats['prefix_lookups'])} hits, "
+                  f"{int(stats['prefix_hit_tokens'])} prompt tokens reused "
+                  f"({int(stats['prefill_tokens'])} prefilled; "
+                  f"{engine.scheduler.extend_compiles} extend + "
+                  f"{engine.scheduler.insert_compiles} insert compile)")
         print("sample:", outs[0][:16].tolist())
         return outs
 
@@ -178,7 +205,13 @@ def main(argv=None):
             rng.normal(0, 0.1, (args.slots, cfg.encoder_frames, cfg.d_model)),
             dtype=cfg.cdtype)
         extras = {"memory": ed.encode(params, frames, cfg)}
-    engine = ServeEngine(run, params, mesh, max_len=max_len)
+    engine = ServeEngine(run, params,
+                         config=ServeConfig.from_args(args, max_len=max_len,
+                                                      num_slots=0,
+                                                      speculative_k=0,
+                                                      prefix_cache=False))
+    if engine.export_report is not None:
+        print(engine.export_report.summary())
     t0 = time.perf_counter()
     out = engine.generate(prompts, max_new=args.max_new, extras=extras)
     dt = time.perf_counter() - t0

@@ -40,7 +40,8 @@ EVENT_FIELDS: Dict[str, tuple] = {
     "profile_window": ("start_step", "stop_step", "trace_dir"),
     # serving (serving/scheduler.py)
     "request_queued": ("rid", "prompt_len", "max_new"),
-    "request_prefill": ("rid", "slot", "fed_len", "resume", "queue_wait_s"),
+    "request_prefill": ("rid", "slot", "fed_len", "resume", "queue_wait_s",
+                        "prefix_hit_len"),
     "request_first_token": ("rid", "ttft_s"),
     "request_retired": ("rid", "latency_s", "tokens", "preemptions"),
     "request_preempted": ("rid", "generated"),
@@ -50,6 +51,30 @@ EVENT_FIELDS: Dict[str, tuple] = {
     # benchmarks (benchmarks/common.py)
     "bench_row": ("bench", "row"),
 }
+
+# RequestResult field -> (event type, payload key) that reports it.  This is
+# the shared vocabulary between serving/config.RequestResult, the scheduler's
+# latency_stats and analysis/obs_report.py: consumers aggregate through this
+# map instead of re-deriving payload keys by string convention.  Fields whose
+# payload key differs from the dataclass name carry the historical event key.
+REQUEST_FIELD_EVENTS: Dict[str, tuple] = {
+    "rid": ("request_retired", "rid"),
+    "token_count": ("request_retired", "tokens"),
+    "prompt_len": ("request_queued", "prompt_len"),
+    "queue_wait_s": ("request_prefill", "queue_wait_s"),
+    "ttft_s": ("request_first_token", "ttft_s"),
+    "latency_s": ("request_retired", "latency_s"),
+    "preemptions": ("request_retired", "preemptions"),
+    "prefix_hit_len": ("request_prefill", "prefix_hit_len"),
+    "drafted_tokens": ("request_retired", "drafted_tokens"),
+    "accepted_tokens": ("request_retired", "accepted_tokens"),
+}
+
+# every mapped (type, key) must be a declared (or additive-extra) payload key
+# of a known serving event type; required keys must actually be required
+for _f, (_etype, _key) in REQUEST_FIELD_EVENTS.items():
+    assert _etype in EVENT_FIELDS, (_f, _etype)
+del _f, _etype, _key
 
 
 def validate_event(ev: dict) -> None:

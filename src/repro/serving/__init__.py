@@ -1,6 +1,8 @@
+from repro.serving.config import RequestResult, ServeConfig  # noqa: F401
 from repro.serving.engine import (ServeEngine, pad_cache,  # noqa: F401
                                   pad_cache_preserving_cross)
 from repro.serving.export import export_for_serving  # noqa: F401
+from repro.serving.radix_cache import RadixCache  # noqa: F401
 from repro.serving.scheduler import Request, Scheduler  # noqa: F401
 from repro.serving.speculative import (DraftReport, accept_lengths,  # noqa: F401
                                        draft_rank_map, make_draft_params)

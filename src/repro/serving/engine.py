@@ -1,13 +1,25 @@
 """Serving engine: continuous batching over the scheduler, with a legacy
 fixed-batch path for families the scheduler doesn't cover.
 
-``ServeEngine`` is the user-facing facade (DESIGN.md §8).  With
-``num_slots > 0`` and a decoder-only LM it owns one
+``ServeEngine`` is the user-facing facade (DESIGN.md §8/§14).  The blessed
+constructor takes a :class:`repro.serving.config.ServeConfig`::
+
+    engine = ServeEngine(run, params, config=ServeConfig(num_slots=4, ...))
+
+— one typed, frozen, validated value instead of the historical kwarg
+sprawl (which still works for one release through a deprecation shim).
+With ``num_slots > 0`` and a decoder-only LM the engine owns one
 :class:`repro.serving.scheduler.Scheduler` — admission queue, paged KV
-cache, per-request eos/max-new, streaming callbacks, and exactly one
-compiled ``serve_step`` for the engine lifetime.  ``generate`` keeps its
-original batch signature on top of it; ``serve`` exposes per-request
-results and trace replay.
+cache (optionally with the radix prefix cache), per-request eos/max-new,
+streaming callbacks, and exactly one compiled ``serve_step`` for the
+engine lifetime.  ``generate`` keeps its original batch signature on top
+of it; ``serve`` returns structured :class:`RequestResult` records (which
+still quack like the old per-request token arrays).
+
+On a multi-device mesh (``config.mesh_data``/``mesh_model``, or an
+explicit ``mesh``) the scheduler places the served params under
+``FROZEN_PARAM_RULES`` and the paged pools KV-head-sharded over ``model``
+— TP decode with the compile-once contract intact.
 
 The legacy fixed-batch path (``extras``-carrying families: enc-dec memory,
 VLM vision embeddings; or ``num_slots == 0``) prefills the whole batch at
@@ -22,7 +34,7 @@ the values.
 
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
@@ -31,6 +43,7 @@ import numpy as np
 
 from repro.configs.base import RunConfig
 from repro.launch import steps as steps_mod
+from repro.serving.config import RequestResult, ServeConfig
 
 # leaf name -> axis that indexes kv positions (None = stateful, no padding).
 # k_scale/v_scale are the int8 cache's per-(batch, position, head) scales —
@@ -76,44 +89,89 @@ def pad_cache_preserving_cross(cache: Any, target_len: int) -> Any:
     return walk(cache, "")
 
 
-@dataclasses.dataclass
+#: legacy constructor kwargs -> ServeConfig field (the deprecation shim)
+_LEGACY_KWARGS = {
+    "max_len": "max_len", "num_slots": "num_slots",
+    "prefill_len": "prefill_len", "block_size": "block_size",
+    "num_blocks": "num_blocks", "speculative_k": "speculative_k",
+    "spec_rank": "spec_rank", "spec_fraction": "spec_fraction",
+}
+
+
 class ServeEngine:
     """Facade over the scheduler (continuous) / fixed-batch (legacy) paths.
 
-    ``num_slots > 0`` enables the scheduler for decoder-only LM families
-    (dense/moe): ``generate`` routes through it and ``serve`` exposes
-    per-request submission.  ``num_slots == 0`` (default) keeps the legacy
-    fixed-batch behaviour everywhere.
+    ``ServeEngine(run, params, config=ServeConfig(...))`` is the blessed
+    constructor.  ``config.num_slots > 0`` enables the scheduler for
+    decoder-only LM families (dense/moe): ``generate`` routes through it
+    and ``serve`` exposes per-request submission.  ``num_slots == 0``
+    (default) keeps the legacy fixed-batch behaviour everywhere.
+
+    ``mesh``: pass one explicitly, or leave ``None`` to have the engine
+    build a host mesh from ``config.mesh_data`` x ``config.mesh_model``.
+    ``config.export != "none"`` runs the Algorithm-1 serving export on
+    ``params`` at construction (``engine.export_report`` holds the report).
+
+    The pre-ServeConfig kwargs (``max_len=``, ``num_slots=``, ...) keep
+    working for one release behind a ``DeprecationWarning``.
     """
 
-    run: RunConfig
-    params: Any
-    mesh: Any
-    max_len: int = 256
-    num_slots: int = 0
-    prefill_len: Optional[int] = None
-    block_size: int = 16
-    num_blocks: Optional[int] = None
-    obs: Any = None  # optional repro.obs.EventLog, handed to the scheduler
-    #: draft tokens per scheduler step (0 = plain decode).  With k > 0 the
-    #: scheduler runs self-speculative decoding: the draft model is derived
-    #: from ``params`` by rank truncation (serving/speculative.py) — no
-    #: second checkpoint — and every emitted token is verified against the
-    #: full model (token-exact greedy decode).
-    speculative_k: int = 0
-    #: explicit draft rank (clamped per-layer); None = Algorithm-1 sweep
-    #: scaled by ``spec_fraction``.
-    spec_rank: Optional[int] = None
-    spec_fraction: float = 0.5
-    #: override the derived draft entirely (e.g. a rank-adapted export
-    #: served as draft); bypasses draft_rank_map/make_draft_params.
-    draft_params: Any = None
-
-    def __post_init__(self):
-        self._prefill = jax.jit(steps_mod.build_prefill_step(self.run, self.mesh))
-        self._step = jax.jit(steps_mod.build_serve_step(self.run, self.mesh))
+    def __init__(self, run: RunConfig, params: Any, mesh: Any = None, *,
+                 config: Optional[ServeConfig] = None,
+                 obs: Any = None, draft_params: Any = None,
+                 **legacy):
+        if legacy:
+            unknown = set(legacy) - set(_LEGACY_KWARGS)
+            if unknown:
+                raise TypeError(
+                    f"ServeEngine got unexpected kwargs {sorted(unknown)}")
+            if config is not None:
+                raise TypeError(
+                    "ServeEngine: pass EITHER config=ServeConfig(...) or "
+                    f"the legacy kwargs {sorted(legacy)}, not both")
+            warnings.warn(
+                "ServeEngine(max_len=..., num_slots=..., ...) kwargs are "
+                "deprecated; build a repro.serving.ServeConfig and pass "
+                "config=... (DESIGN.md §14). The kwargs are removed next "
+                "release.", DeprecationWarning, stacklevel=2)
+            config = ServeConfig(**{_LEGACY_KWARGS[k]: v
+                                    for k, v in legacy.items()})
+        self.config = config or ServeConfig()
+        self.run = run
+        self.params = params
+        self.obs = obs
+        self.draft_params = draft_params
+        self.export_report = None
+        if mesh is None:
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh(self.config.mesh_data,
+                                  self.config.mesh_model)
+        self.mesh = mesh
+        if self.config.export != "none":
+            from repro.serving.export import export_for_serving
+            backend = ("measured" if self.config.export == "measured"
+                       else "analytic-tpu")
+            self.params, self.export_report = export_for_serving(
+                params, backend=backend,
+                probe_tokens=max(self.config.num_slots, 1),
+                quantize_factors="int8" if self.config.export_int8
+                else None)
+        self._prefill = jax.jit(steps_mod.build_prefill_step(run, self.mesh))
+        self._step = jax.jit(steps_mod.build_serve_step(run, self.mesh))
         self._scheduler = None
         self.draft_report = None  # set when a draft is derived lazily
+
+    # ServeConfig passthroughs, so call sites written against the kwarg-era
+    # attributes (engine.max_len, engine.num_slots, ...) keep reading the
+    # same values from the one config object.
+    max_len = property(lambda self: self.config.max_len)
+    num_slots = property(lambda self: self.config.num_slots)
+    prefill_len = property(lambda self: self.config.prefill_len)
+    block_size = property(lambda self: self.config.block_size)
+    num_blocks = property(lambda self: self.config.num_blocks)
+    speculative_k = property(lambda self: self.config.speculative_k)
+    spec_rank = property(lambda self: self.config.spec_rank)
+    spec_fraction = property(lambda self: self.config.spec_fraction)
 
     # -- continuous-batching path -----------------------------------------
 
@@ -131,11 +189,8 @@ class ServeEngine:
                 draft, self.draft_report = speculative.make_draft_params(
                     self.params, rank_map)
             self._scheduler = Scheduler(
-                self.run, self.params, self.mesh,
-                num_slots=self.num_slots, max_len=self.max_len,
-                prefill_len=self.prefill_len, block_size=self.block_size,
-                num_blocks=self.num_blocks, obs=self.obs,
-                speculative_k=self.speculative_k, draft_params=draft)
+                self.run, self.params, self.mesh, obs=self.obs,
+                draft_params=draft, **self.config.scheduler_kwargs())
         return self._scheduler
 
     def _scheduler_usable(self, extras, prompt_len=0, max_new=0) -> bool:
@@ -148,15 +203,19 @@ class ServeEngine:
                 and prompt_len + max_new <= self.max_len)
 
     def serve(self, requests: Sequence[Dict[str, Any]],
-              on_token=None) -> List[np.ndarray]:
+              on_token=None) -> List[RequestResult]:
         """Submit request dicts, drain the scheduler, return per-request
-        tokens in submission order.
+        :class:`RequestResult` records in submission order.
 
         Each request: ``{"prompt": 1-D int tokens, "max_new": int,
         "eos_id": Optional[int], "arrival": float virtual seconds}`` (only
         ``prompt`` required).  Streaming: ``on_token(request, token)`` fires
-        per generated token.  ``engine.scheduler.latency_stats()`` has the
-        trace's latency/throughput percentiles afterwards.
+        per generated token.  Results carry tokens plus the queue/first-
+        token/completion latencies, spec acceptance, and prefix-cache hit
+        length of the request (fields shared with the obs event schema);
+        they index/iterate like the bare token arrays ``serve`` used to
+        return.  ``engine.scheduler.latency_stats()`` has the trace-level
+        percentiles afterwards.
         """
         sched = self.scheduler
         sched.on_token = on_token
@@ -168,8 +227,8 @@ class ServeEngine:
                              eos_id=r.get("eos_id"),
                              arrival=float(r.get("arrival", 0.0)))
                 for r in requests]
-        out = sched.run()
-        return [out[r] for r in rids]
+        sched.run()
+        return [RequestResult.from_request(sched.finished[r]) for r in rids]
 
     # -- batch generate (scheduler-backed when possible) -------------------
 

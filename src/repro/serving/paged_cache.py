@@ -52,11 +52,17 @@ def blocks_for(length: int, block_size: int) -> int:
 
 
 class BlockAllocator:
-    """Free-list allocator over ``num_blocks`` physical blocks.
+    """Refcounted free-list allocator over ``num_blocks`` physical blocks.
 
     Block 0 is reserved as the sink (module docstring) and never handed
     out; ``alloc`` is all-or-nothing so a request can never be admitted
     with a partial page set.
+
+    Refcounts enable the radix prefix cache's copy-on-write sharing
+    (serving/radix_cache.py): a block allocated once (``rc == 1``) may be
+    ``ref``'d by every slot whose prompt matched it in the trie, and only
+    returns to the free list when the last holder ``free``'s it.  Non-shared
+    operation is unchanged — rc stays 1 from alloc to free.
     """
 
     def __init__(self, num_blocks: int):
@@ -64,22 +70,39 @@ class BlockAllocator:
             raise ValueError("need >= 2 blocks (block 0 is the reserved sink)")
         self.num_blocks = num_blocks
         self._free: deque = deque(range(1, num_blocks))
+        self._rc = np.zeros(num_blocks, np.int32)
 
     @property
     def free_blocks(self) -> int:
         return len(self._free)
 
+    def refcount(self, block: int) -> int:
+        return int(self._rc[block])
+
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop ``n`` blocks, or None (and no side effect) if unavailable."""
+        """Pop ``n`` blocks (rc=1 each), or None (no side effect) if
+        unavailable."""
         if n > len(self._free):
             return None
-        return [self._free.popleft() for _ in range(n)]
+        blocks = [self._free.popleft() for _ in range(n)]
+        self._rc[blocks] = 1
+        return blocks
+
+    def ref(self, blocks: List[int]) -> None:
+        """Add one holder to each (already-allocated) block."""
+        for b in blocks:
+            if not 1 <= b < self.num_blocks or self._rc[b] < 1:
+                raise ValueError(f"ref on unallocated block id {b}")
+            self._rc[b] += 1
 
     def free(self, blocks: List[int]) -> None:
+        """Drop one holder per block; last holder returns it to the pool."""
         for b in blocks:
-            if not 1 <= b < self.num_blocks:
+            if not 1 <= b < self.num_blocks or self._rc[b] < 1:
                 raise ValueError(f"freeing invalid block id {b}")
-            self._free.append(b)
+            self._rc[b] -= 1
+            if self._rc[b] == 0:
+                self._free.append(b)
 
 
 class PageTableManager:
@@ -106,26 +129,43 @@ class PageTableManager:
     def allocated(self, slot: int) -> int:
         return len(self._slot_blocks[slot])
 
+    def blocks(self, slot: int) -> List[int]:
+        """The slot's physical blocks in logical order (copy)."""
+        return list(self._slot_blocks[slot])
+
     @property
     def used_blocks(self) -> int:
         """Blocks currently held by slots (sink block excluded)."""
         return self.allocator.num_blocks - 1 - self.allocator.free_blocks
 
-    def admit(self, slot: int, length: int) -> bool:
-        """Allocate pages covering ``length`` positions for a fresh slot."""
+    def admit(self, slot: int, length: int,
+              shared: Optional[List[int]] = None) -> bool:
+        """Allocate pages covering ``length`` positions for a fresh slot.
+
+        ``shared``: physical blocks matched in the radix prefix cache
+        (serving/radix_cache.py) forming the head of the slot's logical
+        pages.  They are refcounted (copy-on-write — decode never writes
+        into them; writes start past the shared prefix in slot-private
+        blocks) and only the remainder is freshly allocated, all-or-nothing.
+        """
+        shared = list(shared or [])
         need = blocks_for(length, self.block_size)
         if need > self.max_blocks:
             raise ValueError(
                 f"request needs {need} blocks > max_blocks_per_slot "
                 f"{self.max_blocks}; raise max_len/block budget")
-        blocks = self.allocator.alloc(need)
+        if len(shared) > need:
+            raise ValueError(f"{len(shared)} shared blocks exceed the "
+                             f"{need}-block request")
+        blocks = self.allocator.alloc(need - len(shared))
         if blocks is None:
             return False
         if self._slot_blocks[slot]:
             raise RuntimeError(f"slot {slot} admitted while holding blocks")
-        self._slot_blocks[slot] = blocks
+        self.allocator.ref(shared)
+        self._slot_blocks[slot] = shared + blocks
         self.table[slot, :] = 0
-        self.table[slot, :need] = blocks
+        self.table[slot, :need] = self._slot_blocks[slot]
         self.version += 1
         self.high_water = max(self.high_water, self.used_blocks)
         return True

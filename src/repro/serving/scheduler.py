@@ -52,10 +52,13 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs.base import RunConfig
+from repro.distributed import (FROZEN_PARAM_RULES, named_shardings,
+                               paged_pool_specs)
 from repro.launch import steps as steps_mod
 from repro.obs import NULL_LOG, EventLog, default_registry
 from repro.serving import paged_cache as pc
 from repro.serving import speculative
+from repro.serving.radix_cache import RadixCache
 
 __all__ = ["Request", "Scheduler"]
 
@@ -82,6 +85,9 @@ class Request:
     t_first: Optional[float] = None  # first-token latency anchor
     t_done: Optional[float] = None
     preemptions: int = 0
+    prefix_hit_len: int = 0  # prompt tokens served from the radix cache
+    drafted: int = 0  # speculative draft tokens proposed for this request
+    accepted: int = 0  # draft tokens the verify pass kept
 
     @property
     def done(self) -> bool:
@@ -134,6 +140,12 @@ class Scheduler:
     draft_params  : the draft model's params (serving/speculative.py);
                     defaults to ``params`` (acceptance 1.0, no speedup —
                     useful for exactness tests).
+    prefix_cache  : radix-tree prompt-prefix cache (DESIGN.md §14,
+                    serving/radix_cache.py): retired requests donate their
+                    prompt KV blocks to a token trie, admission reuses
+                    matched blocks copy-on-write and prefills only the
+                    suffix.  Paged layout only (a contiguous MLA cache has
+                    no blocks to share — the flag is a no-op there).
     """
 
     def __init__(self, run: RunConfig, params: Any, mesh, *,
@@ -142,7 +154,8 @@ class Scheduler:
                  num_blocks: Optional[int] = None,
                  on_token: Optional[Callable[[Request, int], None]] = None,
                  obs: Optional[EventLog] = None,
-                 speculative_k: int = 0, draft_params: Any = None):
+                 speculative_k: int = 0, draft_params: Any = None,
+                 prefix_cache: bool = False):
         cfg = run.model
         if cfg.family not in ("dense", "moe"):
             raise ValueError(
@@ -164,6 +177,23 @@ class Scheduler:
         # obey the user-facing prompt + max_new <= max_len contract)
         window = max_len + self.spec_k
 
+        # TP-sharded serving (DESIGN.md §14): on a multi-device mesh the
+        # served params take the FROZEN placement — replicated over data,
+        # TP over model only where the forward consumes the shard locally —
+        # so a serving step has zero parameter collectives.  Exported int8
+        # factor leaves (u_q/u_scale/...) and non-uniform per-layer ranks
+        # resolve through the same path-based rules (divisibility fallbacks
+        # re-apply per layer at heterogeneous ranks).
+        self._sharded = mesh.devices.size > 1
+        if self._sharded:
+            self.params = jax.device_put(
+                params, named_shardings(params, mesh, FROZEN_PARAM_RULES))
+            if self.draft_params is not None:
+                self.draft_params = jax.device_put(
+                    self.draft_params,
+                    named_shardings(self.draft_params, mesh,
+                                    FROZEN_PARAM_RULES))
+
         self.layout = "paged" if pc.supports_paged(cfg) else "slots"
         if self.layout == "paged":
             self.block_size = block_size
@@ -174,20 +204,41 @@ class Scheduler:
                                              num_blocks, block_size)
             self.cache = pc.init_paged_cache(cfg, num_slots, num_blocks,
                                              block_size, max_blocks)
+            # commit the pool to its lifetime placement up front: pool
+            # leaves KV-head-sharded over model (page tables replicated) —
+            # the same specs every step clamps its cache outputs to, so
+            # the executable signature never drifts between the first call
+            # (fresh pool) and steady state (echoed jit outputs).  On one
+            # device this is just an explicit commit; without it the
+            # uncommitted init pool and the committed first-insert output
+            # key two insert executables on multi-device platforms.
+            self.cache = jax.tree_util.tree_map(
+                lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)),
+                self.cache, paged_pool_specs(self.cache, mesh))
+
             # the cache operand is donated: the pool updates in place
             # instead of double-buffering (2x the KV memory the paged
             # design exists to bound)
-            self._insert = jax.jit(pc.insert_prefill_paged,
-                                   donate_argnums=(0,))
+            def _insert_fn(cache, pcache, page_row):
+                return steps_mod.clamp_paged_cache(
+                    pc.insert_prefill_paged(cache, pcache, page_row), mesh)
+
+            self._insert = jax.jit(_insert_fn, donate_argnums=(0,))
+            self.prefix = (RadixCache(self.pages.allocator, block_size)
+                           if prefix_cache else None)
         else:
             self.pages = None
             self.cache = pc.init_slot_cache(cfg, num_slots, window)
             self._insert = jax.jit(pc.insert_prefill_rows,
                                    donate_argnums=(0,))
+            self.prefix = None  # contiguous rows: nothing to share
 
         self._prefill = jax.jit(steps_mod.build_slot_prefill_step(run, mesh))
         self._decode = jax.jit(steps_mod.build_serve_step(run, mesh),
                                donate_argnums=(1,))
+        self._extend = (jax.jit(steps_mod.build_extend_step(run, mesh),
+                                donate_argnums=(1,))
+                        if self.prefix is not None else None)
         if self.spec_k:
             # two extra once-compiled programs: the k-step fused draft
             # chain (draft params, one dispatch for all k tokens) and the
@@ -214,13 +265,20 @@ class Scheduler:
         # becomes a compile_cache event (the single-compile contract,
         # observable instead of test-only)
         self._compiles_seen = {"prefill": 0, "decode": 0,
-                               "draft": 0, "verify": 0}
+                               "draft": 0, "verify": 0,
+                               "insert": 0, "extend": 0}
         #: speculative-decoding counters (drafted/accepted are TOKEN
         #: counts over active slots; acceptance compares draft tokens to
         #: the verify chunk's greedy choices, independent of how many
         #: tokens a mid-chunk retirement actually emitted)
         self.spec_stats = {"spec_steps": 0, "drafted": 0, "accepted": 0,
                            "rejected": 0, "emitted": 0}
+        #: radix-prefix-cache counters.  ``prefill_tokens`` counts REAL
+        #: (unpadded) tokens run through a prefill/extend forward and is
+        #: maintained with the cache off too — it is the apples-to-apples
+        #: "prefill compute" the cached-vs-uncached bench rows compare.
+        self.prefix_stats = {"lookups": 0, "hits": 0, "hit_tokens": 0,
+                             "prefill_tokens": 0, "evicted_blocks": 0}
 
     # -- metrics -----------------------------------------------------------
 
@@ -242,6 +300,18 @@ class Scheduler:
     def verify_compiles(self) -> int:
         """Compiled chunked-verify executables — exactly 1 when speculating."""
         return self._verify._cache_size() if self._verify is not None else 0
+
+    @property
+    def insert_compiles(self) -> int:
+        """Compiled prefill-insert executables — the contract is exactly 1."""
+        return self._insert._cache_size()
+
+    @property
+    def extend_compiles(self) -> int:
+        """Compiled suffix-extend executables — exactly 1 once the radix
+        cache has served a hit (0 before the first hit / with the cache
+        off)."""
+        return self._extend._cache_size() if self._extend is not None else 0
 
     def acceptance_rate(self) -> float:
         """Cumulative draft acceptance since the last ``reset_stats``."""
@@ -309,7 +379,10 @@ class Scheduler:
             self.obs.emit("request_retired", rid=req.rid,
                           latency_s=req.t_done - req.arrival,
                           tokens=len(req.tokens),
-                          preemptions=req.preemptions)
+                          preemptions=req.preemptions,
+                          drafted_tokens=req.drafted,
+                          accepted_tokens=req.accepted,
+                          prefix_hit_len=req.prefix_hit_len)
         self._release(slot)
 
     def _release(self, slot: _Slot) -> None:
@@ -338,6 +411,23 @@ class Scheduler:
         self.queue.appendleft(slot.req)
         self._release(slot)
 
+    def _match_prefix(self, fed: np.ndarray) -> List[int]:
+        """Radix lookup for an admission, capped so the suffix keeps >= 1
+        token: even a full-prompt hit re-feeds the last fed token, so the
+        extend step always has logits to sample the next token from AND its
+        writes start at a block boundary in slot-private blocks — shared
+        blocks stay strictly read-only (copy-on-write by construction)."""
+        if self.prefix is None:
+            return []
+        self.prefix_stats["lookups"] += 1
+        blocks = self.prefix.match(fed)
+        usable = min(len(blocks), (fed.size - 1) // self.block_size)
+        shared = blocks[:usable]
+        if shared:
+            self.prefix_stats["hits"] += 1
+            self.prefix_stats["hit_tokens"] += usable * self.block_size
+        return shared
+
     def _admit(self, now: float) -> None:
         for idx, slot in enumerate(self.slots):
             if slot.active or not self.queue:
@@ -350,21 +440,43 @@ class Scheduler:
             # makes at least one token of progress before it can be
             # preempted again (no admit/preempt livelock on a dry pool);
             # +spec_k covers the draft lookahead of that first step.
+            need_len = fed.size + 1 + self.spec_k
+            shared = self._match_prefix(fed) if self.pages is not None else []
             if self.pages is not None \
-                    and not self.pages.admit(idx, fed.size + 1 + self.spec_k):
-                if not any(s.active for s in self.slots):
-                    # blocks are held by active slots only, so with none
-                    # active the pool is as free as it will ever be — the
-                    # head request can never be served
-                    raise RuntimeError(
-                        f"request {req.rid} needs "
-                        f"{pc.blocks_for(fed.size + 1 + self.spec_k, self.block_size)} "
-                        f"blocks but the pool has "
-                        f"{self.pages.allocator.free_blocks} free at idle "
-                        f"— raise num_blocks")
-                break  # no pages — wait for a retirement
+                    and not self.pages.admit(idx, need_len, shared=shared):
+                if self.prefix is not None:
+                    # reclaim cached-only blocks before waiting/preempting
+                    # (dropping cache beats stalling live work); the
+                    # just-matched prefix is protected — it is not
+                    # refcounted by the slot yet
+                    deficit = (pc.blocks_for(need_len, self.block_size)
+                               - len(shared)
+                               - self.pages.allocator.free_blocks)
+                    self.prefix_stats["evicted_blocks"] += \
+                        self.prefix.evict(deficit, protect=shared)
+                if not self.pages.admit(idx, need_len, shared=shared):
+                    if not any(s.active for s in self.slots):
+                        # with no slots active the pool is as free as
+                        # eviction can make it; drop the matched prefix too
+                        # and retry with a full allocation before declaring
+                        # the request unservable
+                        if self.prefix is not None:
+                            self.prefix_stats["evicted_blocks"] += \
+                                self.prefix.evict(self.prefix.cached_blocks)
+                            shared = []
+                            if self.pages.admit(idx, need_len):
+                                self.queue.popleft()
+                                self._start(idx, slot, req, fed, shared)
+                                continue
+                        raise RuntimeError(
+                            f"request {req.rid} needs "
+                            f"{pc.blocks_for(need_len, self.block_size)} "
+                            f"blocks but the pool has "
+                            f"{self.pages.allocator.free_blocks} free at "
+                            f"idle — raise num_blocks")
+                    break  # no pages — wait for a retirement
             self.queue.popleft()
-            self._start(idx, slot, req, fed)
+            self._start(idx, slot, req, fed, shared)
 
     def _note_compiles(self, fn: str) -> None:
         """Emit a compile_cache event when an executable cache grew — in
@@ -373,35 +485,66 @@ class Scheduler:
         n = {"decode": self.decode_compiles,
              "prefill": self.prefill_compiles,
              "draft": self.draft_compiles,
-             "verify": self.verify_compiles}[fn]
+             "verify": self.verify_compiles,
+             "insert": self.insert_compiles,
+             "extend": self.extend_compiles}[fn]
         if n != self._compiles_seen[fn]:
             self._compiles_seen[fn] = n
             self.obs.emit("compile_cache", fn=fn, compiles=n)
 
     def _start(self, idx: int, slot: _Slot, req: Request,
-               fed: np.ndarray) -> None:
+               fed: np.ndarray, shared: Optional[List[int]] = None) -> None:
         now = self._now()
         resume = bool(req.tokens)
+        hit = len(shared or []) * (self.block_size if self.pages else 0)
         if req.t_started is None:
             req.t_started = now
+        if not resume:
+            req.prefix_hit_len = hit
         if self.obs.active:
             self.obs.emit("request_prefill", rid=req.rid, slot=idx,
                           fed_len=int(fed.size), resume=resume,
-                          queue_wait_s=max(req.t_started - req.arrival, 0.0))
-        padded = np.zeros((1, self.prefill_len), np.int32)
-        padded[0, :fed.size] = fed
-        batch = {"tokens": jnp.asarray(padded),
-                 "labels": jnp.zeros_like(jnp.asarray(padded))}
-        last, pcache = self._prefill(
-            self.params, batch, jnp.asarray([fed.size - 1], jnp.int32))
-        if self.obs.active:
-            self._note_compiles("prefill")
-        if self.pages is not None:
-            self.cache = self._insert(
-                self.cache, pcache, jnp.asarray(self.pages.table[idx]))
+                          queue_wait_s=max(req.t_started - req.arrival, 0.0),
+                          prefix_hit_len=hit)
+        self.prefix_stats["prefill_tokens"] += int(fed.size) - hit
+        if hit:
+            # radix hit: the shared blocks already hold KV for fed[:hit] —
+            # forward only the suffix through the chunked extend step
+            # (writes land past the shared prefix, in slot-private blocks)
+            suffix = fed[hit:]
+            padded = np.zeros((1, self.prefill_len), np.int32)
+            padded[0, :suffix.size] = suffix
+            self.cache, nxt = self._extend(
+                self.params, self.cache, jnp.asarray(padded),
+                jnp.asarray(self.pages.table[idx]),
+                jnp.asarray(hit, jnp.int32))
+            if self.obs.active:
+                self._note_compiles("extend")
+            first_tok = int(np.asarray(nxt)[0, suffix.size - 1])
         else:
-            self.cache = self._insert(self.cache, pcache,
-                                      jnp.asarray(idx, jnp.int32))
+            padded = np.zeros((1, self.prefill_len), np.int32)
+            padded[0, :fed.size] = fed
+            batch = {"tokens": jnp.asarray(padded),
+                     "labels": jnp.zeros_like(jnp.asarray(padded))}
+            last, pcache = self._prefill(
+                self.params, batch, jnp.asarray([fed.size - 1], jnp.int32))
+            if self.obs.active:
+                self._note_compiles("prefill")
+            if self.pages is not None:
+                self.cache = self._insert(
+                    self.cache, pcache, jnp.asarray(self.pages.table[idx]))
+            else:
+                self.cache = self._insert(self.cache, pcache,
+                                          jnp.asarray(idx, jnp.int32))
+            if self.obs.active and self.pages is not None:
+                self._note_compiles("insert")
+            first_tok = int(np.asarray(jnp.argmax(last, axis=-1))[0])
+        if self.prefix is not None:
+            # index this slot's fully-written prompt blocks; insert() adopts
+            # only the novel tail (already-cached prefixes keep their owner)
+            n_full = fed.size // self.block_size
+            if n_full:
+                self.prefix.insert(fed, self.pages.blocks(idx)[:n_full])
         slot.req = req
         slot.pos = fed.size
         slot.admitted_at = self._admit_seq
@@ -409,7 +552,7 @@ class Scheduler:
         if req.tokens:  # preemption resume: pending token already known
             slot.token = req.tokens[-1]
         else:
-            self._emit(slot, int(np.asarray(jnp.argmax(last, axis=-1))[0]))
+            self._emit(slot, first_tok)
 
     def _ensure_pages(self) -> None:
         """Grow page tables so every active slot can write at its position;
@@ -420,6 +563,15 @@ class Scheduler:
         for idx, slot in enumerate(self.slots):
             while slot.active and \
                     not self.pages.ensure(idx, slot.pos + self.spec_k):
+                if self.prefix is not None:
+                    # cached-only blocks go before live work does
+                    need = (pc.blocks_for(slot.pos + self.spec_k + 1,
+                                          self.block_size)
+                            - self.pages.allocated(idx))
+                    freed = self.prefix.evict(need)
+                    self.prefix_stats["evicted_blocks"] += freed
+                    if freed:
+                        continue
                 victims = [s for s in self.slots
                            if s.active and self._preemptable(s)]
                 if not victims:
@@ -465,6 +617,8 @@ class Scheduler:
             acc = int(ns[i])
             drafted += k
             accepted += acc
+            s.req.drafted += k
+            s.req.accepted += acc
             for j in range(acc):
                 s.pos += 1
                 self._emit(s, int(chunk[i, j + 1]))
@@ -576,7 +730,9 @@ class Scheduler:
                  "p50_queue_wait_s", "p95_queue_wait_s",
                  "preemptions", "preempted_requests",
                  "spec_steps", "drafted_tokens", "accepted_tokens",
-                 "acceptance_rate")
+                 "acceptance_rate",
+                 "prefill_tokens", "prefix_lookups", "prefix_hits",
+                 "prefix_hit_tokens", "prefix_evicted_blocks")
 
     def reset_stats(self) -> None:
         """Drop finished-request records and re-anchor the trace clock.
@@ -594,6 +750,8 @@ class Scheduler:
         self.finished.clear()
         for key in self.spec_stats:
             self.spec_stats[key] = 0
+        for key in self.prefix_stats:
+            self.prefix_stats[key] = 0
         self._t0 = None
 
     def latency_stats(self) -> Dict[str, float]:
@@ -635,4 +793,10 @@ class Scheduler:
             "drafted_tokens": float(self.spec_stats["drafted"]),
             "accepted_tokens": float(self.spec_stats["accepted"]),
             "acceptance_rate": self.acceptance_rate(),
+            "prefill_tokens": float(self.prefix_stats["prefill_tokens"]),
+            "prefix_lookups": float(self.prefix_stats["lookups"]),
+            "prefix_hits": float(self.prefix_stats["hits"]),
+            "prefix_hit_tokens": float(self.prefix_stats["hit_tokens"]),
+            "prefix_evicted_blocks": float(
+                self.prefix_stats["evicted_blocks"]),
         }

@@ -345,9 +345,10 @@ def test_serve_lifecycle_events(serve_trace):
     assert by_type.get("request_preempted")
     assert any(e["resume"] for e in by_type["request_prefill"])
     assert all(e["queue_wait_s"] >= 0 for e in by_type["request_prefill"])
-    # compile-cache watermarks: one prefill + one decode compile overall
+    # compile-cache watermarks: the paged engine runs exactly one
+    # prefill, one pool-insert, and one decode compile overall
     compiles = {e["fn"]: e["compiles"] for e in by_type["compile_cache"]}
-    assert compiles == {"prefill": 1, "decode": 1}
+    assert compiles == {"prefill": 1, "insert": 1, "decode": 1}
     assert all(e["active_slots"] <= 2 for e in by_type["serve_step"])
     assert max(e["pool_high_water"] for e in by_type["serve_step"]) <= 10
 
@@ -358,7 +359,7 @@ def test_serve_summary_from_trace(serve_trace):
     assert s["queued"] == s["retired"] == 3
     assert s["preempted_requests"] >= 1
     assert s["generated_tokens"] == stats["generated_tokens"]
-    assert s["compiles"] == {"prefill": 1, "decode": 1}
+    assert s["compiles"] == {"prefill": 1, "insert": 1, "decode": 1}
     assert s["p99_latency_s"] >= s["p50_latency_s"]
     assert obs_report.render_serve(s).startswith("serving summary:")
 

@@ -1,0 +1,294 @@
+"""Radix prefix cache: trie insert/match/split units over a refcounted
+block allocator, copy-on-write forking of shared prompt blocks, the
+eviction-vs-preemption interaction on a dry pool, and end-to-end greedy
+exactness vs the uncached scheduler across {bf16, int8 KV} x {paged, MLA
+contiguous} (the contiguous fallback has no block pool — the cache must
+degrade to a hit-0 no-op, not an error)."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import DistConfig, LRDConfig, RunConfig, ShapeConfig
+from repro.launch import steps
+from repro.serving import RadixCache, ServeConfig, ServeEngine
+from repro.serving.paged_cache import BlockAllocator
+from repro.serving.scheduler import Scheduler
+
+
+def _alloc(n=32):
+    return BlockAllocator(n)
+
+
+def _toks(*vals):
+    return np.asarray(vals, np.int32)
+
+
+def seq(n, base=0):
+    return np.arange(base, base + n, dtype=np.int32)
+
+
+# -- trie units -------------------------------------------------------------
+
+def test_match_empty_and_insert_then_full_match():
+    a = _alloc()
+    c = RadixCache(a, block_size=4)
+    assert c.match(seq(8)) == []
+    blocks = a.alloc(2)
+    c.insert(seq(8), blocks)
+    assert c.match(seq(8)) == blocks
+    # a longer query still matches only the cached prefix
+    assert c.match(seq(12)) == blocks
+    # a diverging query matches nothing (first block differs)
+    assert c.match(seq(8, base=100)) == []
+
+
+def test_partial_match_is_block_granular():
+    a = _alloc()
+    c = RadixCache(a, block_size=4)
+    blocks = a.alloc(3)
+    c.insert(seq(12), blocks)
+    # 7 agreeing tokens = 1 full block; the partial second block never
+    # matches (sharing is block-granular by construction)
+    q = np.concatenate([seq(7), _toks(99, 98, 97, 96, 95)])
+    assert c.match(q) == blocks[:1]
+
+
+def test_insert_splits_edge_at_block_boundary():
+    a = _alloc()
+    c = RadixCache(a, block_size=2)
+    b_long = a.alloc(3)
+    c.insert(seq(6), b_long)
+    # second sequence shares the first 2 blocks then diverges: the 3-block
+    # edge must split, and the diverging tail adopts only its novel block
+    other = np.concatenate([seq(4), _toks(50, 51)])
+    b_new = a.alloc(3)
+    c.insert(other, b_new)
+    assert c.match(seq(6)) == b_long
+    assert c.match(other) == b_long[:2] + b_new[2:]
+    # the shared blocks got a ref per adopting path, novel tails one each
+    assert a.refcount(b_long[0]) >= 1
+    # blocks 0/1 of b_new were never adopted (the cache holds no ref)
+    assert c.cached_blocks == 4
+
+
+def test_insert_is_idempotent_for_cached_prefixes():
+    a = _alloc()
+    c = RadixCache(a, block_size=4)
+    blocks = a.alloc(2)
+    c.insert(seq(8), blocks)
+    before = c.cached_blocks
+    dup = a.alloc(2)  # a second writer produced identical content
+    c.insert(seq(8), dup)
+    assert c.cached_blocks == before  # nothing novel adopted
+    assert c.match(seq(8)) == blocks  # first owner wins
+
+
+def test_evict_frees_lru_leaf_tails_first():
+    a = _alloc(16)
+    c = RadixCache(a, block_size=2)
+    b1 = a.alloc(2)
+    c.insert(seq(4), b1)                      # older leaf
+    a.free(b1)                                # writing slot retired
+    b2 = a.alloc(2)
+    c.insert(seq(4, base=50), b2)             # newer leaf
+    a.free(b2)
+    c.match(seq(4))                           # touch: b1 becomes MRU
+    freed = c.evict(1)
+    assert freed == 1
+    # the untouched (LRU) leaf lost its tail block; the touched one intact
+    assert c.match(seq(4)) == b1
+    assert c.match(seq(4, base=50)) == b2[:1]
+
+
+def test_evict_respects_refcounts_and_protect():
+    a = _alloc(16)
+    c = RadixCache(a, block_size=2)
+    blocks = a.alloc(2)
+    c.insert(seq(4), blocks)
+    a.free(blocks)  # writing slot retired: rc=1, tree is the sole holder
+    a.ref(blocks)   # a new slot admits the shared blocks (rc=2)
+    assert c.evict(2) == 0  # shared blocks are not evictable
+    a.free(blocks)  # that slot retires too; rc back to 1
+    # tail-first order: a protected tail pins the whole leaf (the head can
+    # only go after the tail) — nothing is evictable this pass
+    assert c.evict(2, protect=blocks[1:]) == 0
+    assert c.evict(2) == 2
+    assert c.cached_blocks == 0
+
+
+def test_drop_all_returns_every_cached_block_to_the_pool():
+    a = _alloc(16)
+    c = RadixCache(a, block_size=2)
+    b1 = a.alloc(3)
+    c.insert(seq(6), b1)
+    a.free(b1)
+    b2 = a.alloc(3)
+    c.insert(np.concatenate([seq(4), _toks(9, 9)]), b2)
+    a.free(b2)  # non-adopted duplicates of b2 return to the pool here
+    free_before = a.free_blocks
+    cached = c.cached_blocks
+    c.drop_all()
+    assert c.cached_blocks == 0
+    assert a.free_blocks == free_before + cached
+
+
+# -- allocator refcounts / COW ---------------------------------------------
+
+def test_allocator_refcount_lifecycle():
+    a = _alloc(8)
+    blocks = a.alloc(2)
+    assert all(a.refcount(b) == 1 for b in blocks)
+    a.ref(blocks)
+    assert all(a.refcount(b) == 2 for b in blocks)
+    free0 = a.free_blocks
+    a.free(blocks)  # rc 2 -> 1: still allocated
+    assert a.free_blocks == free0
+    a.free(blocks)  # rc 1 -> 0: returned
+    assert a.free_blocks == free0 + 2
+    with pytest.raises(ValueError):
+        a.free(blocks)  # double free
+    with pytest.raises(ValueError):
+        a.ref([blocks[0]])  # ref of an unallocated block
+
+
+def _scheduler(arch="smollm-360m", kv_dtype=None, prefix_cache=True,
+               num_blocks=None, max_len=48, num_slots=2, block_size=4):
+    cfg = get_smoke_config(arch)
+    if kv_dtype:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_dtype)
+    run = RunConfig(model=cfg,
+                    shape=ShapeConfig("s", max_len, num_slots, "decode"),
+                    lrd=LRDConfig(enabled=False),
+                    dist=DistConfig(fsdp=False, remat="none"))
+    params, _ = steps.init_params(run, jax.random.PRNGKey(0))
+    from repro.launch.mesh import make_host_mesh
+    sched = Scheduler(run, params, make_host_mesh(1, 1),
+                      num_slots=num_slots, max_len=max_len,
+                      prefill_len=max_len // 2, block_size=block_size,
+                      num_blocks=num_blocks, prefix_cache=prefix_cache)
+    return run, params, sched
+
+
+def test_cow_fork_shared_prefix_blocks_never_rewritten():
+    """Two concurrent requests share cached prefix blocks; their divergent
+    generations must not corrupt each other (writes only land in private
+    blocks — COW by the matched-block cap, enforced via refcounts)."""
+    run, params, sched = _scheduler()
+    prefix = seq(16, base=1)
+    r1 = sched.submit(np.concatenate([prefix, _toks(100, 101)]), max_new=6)
+    out1_solo = sched.run()[r1]
+    hit1 = sched.finished[r1]
+    # both forks admitted together, sharing the cached prefix blocks
+    ra = sched.submit(np.concatenate([prefix, _toks(100, 101)]), max_new=6)
+    rb = sched.submit(np.concatenate([prefix, _toks(200, 201)]), max_new=6)
+    out = sched.run()
+    assert sched.finished[ra].prefix_hit_len == 16
+    assert sched.finished[rb].prefix_hit_len == 16
+    # the re-played fork reproduces its uncached-prefix generation exactly
+    assert out[ra].tolist() == out1_solo.tolist()
+    # and the sibling fork diverged without corrupting the shared blocks
+    ra2 = sched.submit(np.concatenate([prefix, _toks(100, 101)]), max_new=6)
+    assert sched.run()[ra2].tolist() == out1_solo.tolist()
+    assert hit1.prefix_hit_len == 0  # first request had nothing to hit
+
+
+def test_eviction_unblocks_admission_on_dry_pool():
+    """A pool fully provisioned for live slots but holding cached blocks:
+    admission must evict cache (youngest-first leaves) instead of failing
+    or preempting live work."""
+    run, params, sched = _scheduler(num_blocks=11, num_slots=1,
+                                    max_len=48, block_size=4)
+    # fill the cache with one request's blocks, then admit a disjoint
+    # request that needs more free blocks than the pool has left
+    r1 = sched.submit(seq(20, base=1), max_new=4)
+    sched.run()
+    assert sched.prefix.cached_blocks > 0
+    r2 = sched.submit(seq(20, base=100), max_new=4)
+    out = sched.run()
+    assert len(out[r2]) == 4
+    stats = sched.latency_stats()
+    assert stats["prefix_evicted_blocks"] > 0
+    assert stats["preemptions"] == 0  # evicted cache, never live slots
+
+
+def test_preemption_still_works_with_prefix_cache_enabled():
+    """Tight pool + two live slots: when eviction can't free enough (all
+    blocks are live), youngest-first preemption must still kick in and
+    every request must complete."""
+    run, params, sched = _scheduler(num_blocks=13, num_slots=2,
+                                    max_len=48, block_size=4)
+    rids = [sched.submit(seq(18, base=i * 100 + 1), max_new=12)
+            for i in range(2)]
+    out = sched.run()
+    assert all(len(out[r]) == 12 for r in rids)
+    assert sched.latency_stats()["preemptions"] >= 1
+
+
+# -- greedy exactness across layouts/dtypes --------------------------------
+
+@pytest.mark.parametrize("kv_dtype", [None, "int8"])
+def test_paged_exactness_vs_uncached(kv_dtype):
+    """Shared-prefix trace through the paged scheduler: cache on == cache
+    off, token for token, while strictly reducing prefilled tokens."""
+    cfg = get_smoke_config("smollm-360m")
+    if kv_dtype:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_dtype)
+    run = RunConfig(model=cfg, shape=ShapeConfig("s", 48, 2, "decode"),
+                    lrd=LRDConfig(enabled=False),
+                    dist=DistConfig(fsdp=False, remat="none"))
+    params, _ = steps.init_params(run, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(1, cfg.vocab_size, 12).astype(np.int32)
+    reqs = [{"prompt": np.concatenate(
+                 [prefix, rng.integers(1, cfg.vocab_size, 3).astype(np.int32)]),
+             "max_new": 5} for _ in range(4)]
+    outs, scheds = {}, {}
+    for cached in (False, True):
+        eng = ServeEngine(run, params, config=ServeConfig(
+            max_len=48, num_slots=2, prefill_len=24, block_size=4,
+            prefix_cache=cached))
+        outs[cached] = eng.serve([dict(r) for r in reqs])
+        scheds[cached] = eng.scheduler
+        assert eng.scheduler.layout == "paged"
+    for a, b in zip(outs[False], outs[True]):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    on, off = (scheds[True].latency_stats(),
+               scheds[False].latency_stats())
+    assert on["prefix_hits"] == 3 and off["prefix_hits"] == 0
+    assert on["prefill_tokens"] < off["prefill_tokens"]
+    assert scheds[True].extend_compiles == 1
+    assert scheds[True].decode_compiles == 1
+
+
+@pytest.mark.parametrize("kv_dtype", [None, "int8"])
+def test_mla_contiguous_fallback_is_a_hit0_noop(kv_dtype):
+    """The MLA arch serves through the contiguous slot layout (no block
+    pool): prefix_cache=True must be a no-op — same tokens, zero hits,
+    no radix structures."""
+    cfg = get_smoke_config("deepseek-v3-671b")
+    if kv_dtype:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_dtype)
+    run = RunConfig(model=cfg, shape=ShapeConfig("s", 24, 2, "decode"),
+                    lrd=LRDConfig(enabled=False),
+                    dist=DistConfig(fsdp=False, remat="none"))
+    params, _ = steps.init_params(run, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prefix = rng.integers(1, cfg.vocab_size, 8).astype(np.int32)
+    reqs = [{"prompt": np.concatenate(
+                 [prefix, rng.integers(1, cfg.vocab_size, 2).astype(np.int32)]),
+             "max_new": 4} for _ in range(3)]
+    outs = {}
+    for cached in (False, True):
+        eng = ServeEngine(run, params, config=ServeConfig(
+            max_len=24, num_slots=2, prefill_len=12, prefix_cache=cached))
+        outs[cached] = eng.serve([dict(r) for r in reqs])
+        sched = eng.scheduler
+        assert sched.layout == "slots" and sched.prefix is None
+        assert sched.latency_stats()["prefix_hits"] == 0
+    for a, b in zip(outs[False], outs[True]):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert b.prefix_hit_len == 0

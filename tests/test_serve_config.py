@@ -1,0 +1,156 @@
+"""ServeConfig/RequestResult API: construction-time validation (incl. the
+num_slots==0 + speculative_k fail-fast that used to be silently ignored),
+the one-release legacy-kwarg deprecation shim, the shared obs field
+vocabulary, and the token-array compatibility of structured results."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import DistConfig, LRDConfig, RunConfig, ShapeConfig
+from repro.launch import steps
+from repro.obs.schema import EVENT_FIELDS, REQUEST_FIELD_EVENTS
+from repro.serving import RequestResult, ServeConfig, ServeEngine
+
+
+def _make(seed=0):
+    cfg = get_smoke_config("smollm-360m")
+    run = RunConfig(model=cfg, shape=ShapeConfig("s", 32, 2, "decode"),
+                    lrd=LRDConfig(enabled=False),
+                    dist=DistConfig(fsdp=False, remat="none"))
+    params, _ = steps.init_params(run, jax.random.PRNGKey(seed))
+    return run, params
+
+
+# -- validation -------------------------------------------------------------
+
+def test_defaults_valid_and_frozen():
+    cfg = ServeConfig()
+    assert cfg.num_slots == 0 and cfg.mesh_model == 1
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.num_slots = 4
+
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(max_len=0), "max_len"),
+    (dict(num_slots=-1), "num_slots"),
+    (dict(prefill_len=64, max_len=32), "prefill_len"),
+    (dict(block_size=0), "block_size"),
+    (dict(num_slots=2, num_blocks=1), "num_blocks"),
+    (dict(speculative_k=-2), "speculative_k"),
+    (dict(num_slots=2, spec_rank=0), "spec_rank"),
+    (dict(num_slots=2, spec_fraction=0.0), "spec_fraction"),
+    (dict(num_slots=2, spec_fraction=1.5), "spec_fraction"),
+    (dict(export="tpu"), "export"),
+    (dict(export_int8=True), "export_int8"),
+    (dict(int8_decode="fp8"), "int8_decode"),
+    (dict(mesh_model=0), "mesh"),
+    (dict(prefix_cache=True), "prefix_cache"),
+])
+def test_invalid_configs_fail_at_construction(kw, match):
+    with pytest.raises(ValueError, match=match):
+        ServeConfig(**kw)
+
+
+def test_fixed_batch_path_rejects_speculative_k():
+    """The silent-ignore bug: num_slots=0 selects the legacy fixed-batch
+    path which has no draft/verify programs — speculative_k used to be
+    swallowed there; now it's a construction-time error naming the fix."""
+    with pytest.raises(ValueError, match="num_slots > 0"):
+        ServeConfig(num_slots=0, speculative_k=2)
+    # and the scheduler path accepts the same knob
+    assert ServeConfig(num_slots=2, speculative_k=2).speculative_k == 2
+
+
+def test_from_args_maps_driver_flags_and_overrides_win():
+    class Args:
+        slots = 4
+        max_len = 0
+        prompt_len = 16
+        block_size = 8
+        num_blocks = 0
+        spec_k = 0
+        spec_rank = 0
+        spec_fraction = 0.5
+        export = "measured"
+        export_int8 = True
+        mesh_data = 1
+        mesh_model = 2
+        prefix_cache = True
+
+    cfg = ServeConfig.from_args(Args(), max_len=48)
+    assert cfg.num_slots == 4 and cfg.max_len == 48
+    assert cfg.prefill_len == 16 and cfg.num_blocks is None
+    assert cfg.spec_rank is None  # 0 means "derive from the sweep"
+    assert cfg.export == "measured" and cfg.export_int8
+    assert cfg.mesh_model == 2 and cfg.prefix_cache
+
+
+def test_scheduler_kwargs_subset():
+    cfg = ServeConfig(num_slots=2, max_len=64, block_size=8,
+                      prefix_cache=True)
+    kw = cfg.scheduler_kwargs()
+    assert kw["num_slots"] == 2 and kw["prefix_cache"] is True
+    assert "mesh_model" not in kw and "export" not in kw
+
+
+# -- engine construction paths ---------------------------------------------
+
+def test_legacy_kwargs_warn_but_work():
+    run, params = _make()
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        eng = ServeEngine(run, params, max_len=32, num_slots=2,
+                          prefill_len=16, block_size=4)
+    assert eng.config.num_slots == 2 and eng.config.block_size == 4
+    out = eng.serve([{"prompt": np.arange(1, 9, dtype=np.int32),
+                      "max_new": 4}])
+    assert len(out[0]) == 4
+
+
+def test_legacy_kwargs_plus_config_is_an_error():
+    run, params = _make()
+    with pytest.raises(TypeError, match="both"):
+        ServeEngine(run, params, config=ServeConfig(max_len=32), max_len=32)
+
+
+def test_unknown_kwarg_is_an_error():
+    run, params = _make()
+    with pytest.raises(TypeError, match="nun_slots"):
+        ServeEngine(run, params, nun_slots=2)
+
+
+# -- RequestResult ----------------------------------------------------------
+
+def test_serve_returns_structured_results_quacking_like_arrays():
+    run, params = _make()
+    eng = ServeEngine(run, params, config=ServeConfig(
+        max_len=32, num_slots=2, prefill_len=16, block_size=4))
+    prompts = [np.arange(1, 10, dtype=np.int32),
+               np.arange(3, 15, dtype=np.int32)]
+    outs = eng.serve([{"prompt": p, "max_new": 5} for p in prompts])
+    assert all(isinstance(r, RequestResult) for r in outs)
+    r = outs[0]
+    assert r.prompt_len == 9 and r.token_count == 5
+    assert r.latency_s >= r.ttft_s >= 0.0
+    assert r.preemptions == 0 and r.prefix_hit_len == 0
+    assert r.drafted_tokens == 0 and r.acceptance_rate == 0.0
+    # token-array compatibility: old callers keep working unchanged
+    assert len(r) == 5 and list(r) == r.tolist()
+    assert r[:3].tolist() == r.tokens[:3].tolist()
+    assert np.asarray(r).dtype == np.int32
+
+
+def test_request_fields_share_the_obs_vocabulary():
+    """Every event-sourced RequestResult field maps to a known event type
+    and a key that event's schema requires — the report and latency_stats
+    aggregate the same names instead of re-deriving them."""
+    fields = {f.name for f in dataclasses.fields(RequestResult)}
+    additive = {"drafted_tokens", "accepted_tokens"}  # schema-additive extras
+    for name, (etype, key) in REQUEST_FIELD_EVENTS.items():
+        assert name in fields or name == "token_count"
+        assert etype in EVENT_FIELDS
+        if name not in additive:
+            assert key in EVENT_FIELDS[etype], (name, etype, key)
